@@ -1,0 +1,54 @@
+"""Paper Fig. 18 — single best dataflow vs the autotuned hybrid (different
+dataflows per layer group)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core import dataflows as df
+from repro.core.autotuner import Autotuner, partition_groups, timeit_fn
+from repro.core.sparse_conv import TrainDataflowConfig
+from repro.models import minkunet
+
+
+def run():
+    cfg = minkunet.MinkUNetConfig(width=0.25, blocks_per_stage=1)
+    stx = common.seg_scene(n=1200)   # NS-M-like smaller segmentation workload
+    params = minkunet.init_params(cfg, jax.random.PRNGKey(0))
+    maps = minkunet.build_maps(stx)
+    sigs = minkunet.layer_signatures(cfg)
+    groups = partition_groups(sigs)
+    sig_of = {g.name: sigs[g.layer_names[0]] for g in groups}
+
+    def lat_for(amap):
+        fn = jax.jit(lambda p: minkunet.apply(p, stx, cfg, maps, assignment=amap))
+        return common.time_fn(lambda: fn(params), iters=2)
+
+    singles = {}
+    for name, c in (("implicit_gemm", df.DataflowConfig("implicit_gemm", n_splits=1)),
+                    ("fetch_on_demand", df.DataflowConfig("fetch_on_demand")),
+                    ("gather_scatter", df.DataflowConfig("gather_scatter"))):
+        singles[name] = lat_for({s: TrainDataflowConfig.bind_all(c) for s in set(sigs.values())})
+
+    space = [df.DataflowConfig("implicit_gemm", n_splits=1),
+             df.DataflowConfig("fetch_on_demand"),
+             df.DataflowConfig("gather_scatter")]
+
+    def measure(assign):
+        amap = {sig_of[k]: TrainDataflowConfig.bind_all(v) for k, v in assign.items()}
+        fn = jax.jit(lambda p: minkunet.apply(p, stx, cfg, maps, assignment=amap))
+        return timeit_fn(lambda: jax.block_until_ready(fn(params)), warmup=1, iters=2)
+
+    best = Autotuner(groups, space, measure).tune()
+    hybrid = lat_for({sig_of[k]: TrainDataflowConfig.bind_all(v) for k, v in best.items()})
+
+    best_single = min(singles.values())
+    for name, us in singles.items():
+        common.emit(f"fig18/NS-M/single/{name}", us, "")
+    n_dataflows = len({v.dataflow for v in best.values()})
+    common.emit("fig18/NS-M/hybrid(torchsparse++)", hybrid,
+                f"speedup_vs_best_single={best_single / hybrid:.3f}x,dataflows_used={n_dataflows}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Paper Fig. 14 — end-to-end inference latency of MinkUNet (segmentation)
+and CenterPoint (detection) under each system's dataflow, plus the
+TorchSparse++ autotuned hybrid.  ``derived`` column = speedup vs the
+slowest baseline."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core import dataflows as df
+from repro.core.autotuner import Autotuner, partition_groups, timeit_fn
+from repro.core.sparse_conv import TrainDataflowConfig
+from repro.models import centerpoint, minkunet
+
+
+def _bench_model(tag, apply_fn, params, stx, maps, sigs):
+    groups = partition_groups(sigs)
+    sig_of = {g.name: sigs[g.layer_names[0]] for g in groups}
+    lats = {}
+    for name, cfg in common.SYSTEMS.items():
+        amap = {s: TrainDataflowConfig.bind_all(cfg) for s in set(sigs.values())}
+        fn = jax.jit(lambda p: apply_fn(p, stx, maps=maps, assignment=amap))
+        lats[name] = common.time_fn(lambda: fn(params))
+
+    # TorchSparse++ = group-tuned hybrid over the full design space
+    space = [df.DataflowConfig("gather_scatter"),
+             df.DataflowConfig("fetch_on_demand"),
+             df.DataflowConfig("implicit_gemm", n_splits=0),
+             df.DataflowConfig("implicit_gemm", n_splits=1),
+             df.DataflowConfig("implicit_gemm", n_splits=2)]
+
+    def measure(assign):
+        amap = {sig_of[k]: TrainDataflowConfig.bind_all(v) for k, v in assign.items()}
+        fn = jax.jit(lambda p: apply_fn(p, stx, maps=maps, assignment=amap))
+        return timeit_fn(lambda: jax.block_until_ready(fn(params)), warmup=1, iters=2)
+
+    best = Autotuner(groups, space, measure).tune()
+    amap = {sig_of[k]: TrainDataflowConfig.bind_all(v) for k, v in best.items()}
+    fn = jax.jit(lambda p: apply_fn(p, stx, maps=maps, assignment=amap))
+    lats["torchsparse++(autotuned)"] = common.time_fn(lambda: fn(params))
+
+    worst = max(lats.values())
+    for name, us in lats.items():
+        common.emit(f"fig14/{tag}/{name}", us, f"speedup_vs_worst={worst / us:.2f}x")
+    return lats
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    mcfg = minkunet.MinkUNetConfig(width=0.25, blocks_per_stage=1)
+    stx = common.seg_scene()
+    params = minkunet.init_params(mcfg, key)
+    maps = minkunet.build_maps(stx)
+    _bench_model("SK-M", lambda p, s, maps, assignment: minkunet.apply(p, s, mcfg, maps, assignment),
+                 params, stx, maps, minkunet.layer_signatures(mcfg))
+
+    ccfg = centerpoint.CenterPointConfig(width=0.5)
+    std = common.det_scene()
+    cparams = centerpoint.init_params(ccfg, key)
+    cmaps = centerpoint.build_maps(std)
+    _bench_model("WM-C", lambda p, s, maps, assignment: centerpoint.apply(p, s, ccfg, maps, assignment),
+                 cparams, std, cmaps, centerpoint.layer_signatures(ccfg))
+
+
+if __name__ == "__main__":
+    run()

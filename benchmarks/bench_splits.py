@@ -1,0 +1,46 @@
+"""Paper Table 5 — enlarging the implicit-GEMM design space by number of
+splits: tuner restricted to {1}, {1,2}, {0,1,2,3,4}."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import dataflows as df
+from repro.core.autotuner import Autotuner, partition_groups, timeit_fn
+from repro.core.sparse_conv import TrainDataflowConfig
+from repro.models import minkunet
+
+
+def run():
+    cfg = minkunet.MinkUNetConfig(width=0.25, blocks_per_stage=1)
+    stx = common.seg_scene()
+    params = minkunet.init_params(cfg, jax.random.PRNGKey(0))
+    maps = minkunet.build_maps(stx)
+    sigs = minkunet.layer_signatures(cfg)
+    groups = partition_groups(sigs)
+    sig_of = {g.name: sigs[g.layer_names[0]] for g in groups}
+
+    def measure(assign):
+        amap = {sig_of[k]: TrainDataflowConfig.bind_all(v) for k, v in assign.items()}
+        fn = jax.jit(lambda p: minkunet.apply(p, stx, cfg, maps, assignment=amap))
+        return timeit_fn(lambda: jax.block_until_ready(fn(params)), warmup=1, iters=2)
+
+    spaces = {
+        "splits={1}": [1],
+        "splits={1,2}": [1, 2],
+        "splits={0..4}": [0, 1, 2, 3, 4],
+    }
+    base = None
+    for name, splits in spaces.items():
+        space = [df.DataflowConfig("implicit_gemm", n_splits=s) for s in splits]
+        best = Autotuner(groups, space, measure).tune()
+        amap = {sig_of[k]: TrainDataflowConfig.bind_all(v) for k, v in best.items()}
+        fn = jax.jit(lambda p: minkunet.apply(p, stx, cfg, maps, assignment=amap))
+        us = common.time_fn(lambda: fn(params))
+        base = base or us
+        common.emit(f"tab5/SK-M/{name}", us, f"speedup_vs_split1={base / us:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Paper Fig. 15 + Fig. 22 — training-step latency: bound vs decoupled
+fwd/dgrad/wgrad dataflows, and the two binding schemes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import dataflows as df
+from repro.core.autotuner import TrainingAutotuner, partition_groups, timeit_fn
+from repro.core.sparse_conv import TrainDataflowConfig
+from repro.models import minkunet
+
+
+def run():
+    cfg = minkunet.MinkUNetConfig(width=0.25, blocks_per_stage=1, num_classes=8)
+    stx = common.seg_scene(n=1500)
+    params = minkunet.init_params(cfg, jax.random.PRNGKey(0))
+    maps = minkunet.build_maps(stx)
+    sigs = minkunet.layer_signatures(cfg)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (stx.capacity,), 0, 8)
+
+    def train_step(amap):
+        def loss(p):
+            lg = minkunet.apply(p, stx, cfg, maps, assignment=amap)
+            ls = jax.nn.log_softmax(lg)[jnp.arange(stx.capacity), labels]
+            return -jnp.sum(jnp.where(stx.valid_mask, ls, 0))
+
+        return jax.jit(lambda p: jax.grad(loss)(p))
+
+    lats = {}
+    for name, c in common.SYSTEMS.items():
+        amap = {s: TrainDataflowConfig.bind_all(c) for s in set(sigs.values())}
+        fn = train_step(amap)
+        lats[f"bound/{name}"] = common.time_fn(lambda: fn(params), iters=2)
+
+    # decoupled: tuned with each binding scheme (paper Fig. 13 / Fig. 22).
+    # Two-candidate space keeps the CPU-container tuning time sane; the
+    # ranking logic is identical at larger |space|.
+    groups = partition_groups(sigs)
+    sig_of = {g.name: sigs[g.layer_names[0]] for g in groups}
+    space = [df.DataflowConfig("gather_scatter"),
+             df.DataflowConfig("implicit_gemm", n_splits=1)]
+
+    def measure(assign):
+        amap = {sig_of[k]: v for k, v in assign.items()}
+        fn = train_step(amap)
+        return timeit_fn(lambda: jax.block_until_ready(fn(params)), warmup=1, iters=2)
+
+    for scheme in ("bind_all", "bind_fwd_dgrad", "bind_dgrad_wgrad"):
+        best = TrainingAutotuner(groups, space, measure, scheme).tune()
+        amap = {sig_of[k]: v for k, v in best.items()}
+        fn = train_step(amap)
+        lats[f"tuned/{scheme}"] = common.time_fn(lambda: fn(params), iters=2)
+
+    worst = max(lats.values())
+    for name, us in lats.items():
+        common.emit(f"fig15/SK-M-train/{name}", us, f"speedup_vs_worst={worst / us:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

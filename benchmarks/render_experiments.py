@@ -1,0 +1,52 @@
+"""Inject the generated roofline / memory / perf tables into EXPERIMENTS.md
+placeholders (<!-- ROOFLINE_TABLE --> etc.).
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks import roofline_report
+
+ROOT = Path(__file__).resolve().parents[1]
+PERF = Path(__file__).resolve().parent / "results" / "perf"
+
+
+def perf_table() -> str:
+    rows = ["| cell | variant | term | baseline | optimized | Δ | confirmed? |",
+            "|---|---|---|---|---|---|---|"]
+    for f in sorted(PERF.glob("*.json")):
+        r = json.loads(f.read_text())
+        b, o = r["baseline_roofline"], r["roofline"]
+        dom = b["bottleneck"]
+        key = {"collective": "collective_s", "memory": "memory_s",
+               "compute": "compute_s"}[dom]
+        bb, oo = b[key], o[key]
+        delta = bb / max(oo, 1e-30)
+        rows.append(
+            f"| {r['arch']}×{r['shape']} | {r['variant']} | T_{dom} "
+            f"| {bb:.3e} s | {oo:.3e} s | **{delta:.1f}×** "
+            f"| {'yes' if delta > 1.05 else 'NO (refuted)'} |")
+        rows.append(
+            f"| | | roofline frac | {b['roofline_fraction']:.3f} "
+            f"| {o['roofline_fraction']:.3f} "
+            f"| {o['roofline_fraction'] / max(b['roofline_fraction'], 1e-9):.1f}× | |")
+    return "\n".join(rows)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- ROOFLINE_TABLE -->",
+                    roofline_report.table("single_pod"))
+    md = md.replace("<!-- MEMORY_TABLE -->",
+                    roofline_report.memory_table("single_pod"))
+    if PERF.exists() and list(PERF.glob("*.json")):
+        md = md.replace("<!-- PERF_TABLE -->", perf_table())
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md rendered")
+
+
+if __name__ == "__main__":
+    main()

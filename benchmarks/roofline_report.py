@@ -1,0 +1,99 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the dry-run JSONs.
+
+MODEL_FLOPS convention:
+  train   : 6 · N · D       (N = params [active for MoE], D = tokens)
+  prefill : 2 · N · D
+  decode  : 2 · N · B       (one token per sequence)
+Ratio MODEL_FLOPS / HLO_FLOPS measures how much compiled compute is
+"useful" (remat and padding waste show up here).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import base as cfgbase
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = cfgbase.get_arch(arch)
+    shape = cfgbase.SHAPES[shape_name]
+    n = cfg.active_params_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.batch * shape.seq
+    return 2.0 * n * shape.batch
+
+
+def improvement_hint(rec: dict) -> str:
+    r = rec["roofline"]
+    b = r["bottleneck"]
+    if b == "collective":
+        return "cut wire bytes: better sharding of the dominant all-gather/all-reduce"
+    if b == "memory":
+        return "cut HBM traffic: less remat / fuse elementwise chains / bf16 intermediates"
+    return "already compute-bound: raise MXU utilization (padding, layouts)"
+
+
+def load(mesh_dir: str):
+    out = []
+    for f in sorted((RESULTS / mesh_dir).glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def table(mesh_dir: str, full: bool = True) -> str:
+    rows = []
+    header = ("| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | bottleneck | "
+              "roofline frac | model/HLO FLOPs | hint |\n"
+              "|---|---|---|---|---|---|---|---|---|")
+    for rec in load(mesh_dir):
+        if rec["status"] == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | SKIP | — | — | "
+                        f"{rec['reason'][:60]} |")
+            continue
+        if rec["status"] != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | ERROR | — | — | see json |")
+            continue
+        r = rec["roofline"]
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_global = rec["global_flops"]
+        ratio = mf / hlo_global if hlo_global else float("nan")
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['bottleneck']} | {r['roofline_fraction']:.3f} "
+            f"| {ratio:.2f} | {improvement_hint(rec)[:58]} |")
+    return header + "\n" + "\n".join(rows)
+
+
+def memory_table(mesh_dir: str) -> str:
+    header = ("| arch | shape | args GB/dev | temp GB/dev | fits 16G? |\n|---|---|---|---|---|")
+    rows = []
+    for rec in load(mesh_dir):
+        if rec["status"] != "ok":
+            continue
+        pd = rec["per_device"]
+        if pd["argument_bytes"] is None:
+            continue
+        args = (pd["argument_bytes"] - (pd["alias_bytes"] or 0)) / 1e9 + (pd["alias_bytes"] or 0) / 1e9
+        temp = (pd["temp_bytes"] or 0) / 1e9
+        total = pd["argument_bytes"] / 1e9 + temp
+        rows.append(f"| {rec['arch']} | {rec['shape']} | {pd['argument_bytes']/1e9:.2f} "
+                    f"| {temp:.2f} | {'yes' if total < 16 else 'NO (' + f'{total:.0f}G' + ')'} |")
+    return header + "\n" + "\n".join(rows)
+
+
+def main():
+    for mesh in ("single_pod", "multi_pod"):
+        if (RESULTS / mesh).exists():
+            print(f"\n### Roofline — {mesh}\n")
+            print(table(mesh))
+    print("\n### Memory fit — single_pod\n")
+    print(memory_table("single_pod"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (see DESIGN.md §6):
+  Fig. 14 inference, Fig. 15/22 training, Tab. 3/4 + Fig. 17 sorted-vs-
+  unsorted, Tab. 5 mask splits, Fig. 18 hybrid dataflow, Fig. 16 R-GCN,
+  Fig. 8 generator-vs-dense-GEMM.
+
+CPU-container caveat: wall-clock numbers here validate *ranking logic*
+(mapping overhead vs kernel time trade-offs) at reduced scale; the TPU
+performance story lives in the dry-run roofline (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_generator, bench_graph, bench_hybrid,
+                            bench_inference, bench_sorted, bench_splits,
+                            bench_training, common)
+
+    suites = [
+        ("fig14_inference", bench_inference.run),
+        ("fig15_training", bench_training.run),
+        ("tab34_sorted", bench_sorted.run),
+        ("tab5_splits", bench_splits.run),
+        ("fig18_hybrid", bench_hybrid.run),
+        ("fig16_graph", bench_graph.run),
+        ("fig8_generator", bench_generator.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

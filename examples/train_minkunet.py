@@ -1,0 +1,76 @@
+"""End-to-end driver: train a MinkUNet segmentation model on synthetic
+LiDAR scenes for a few hundred steps, with the full production substrate —
+AdamW, grad clipping, async checkpointing, resume, straggler watchdog.
+
+    PYTHONPATH=src python examples/train_minkunet.py --steps 300 --width 1.0
+
+(~100M-param model at --width 2.6; the default keeps CPU runtime sane.)
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_conv import TrainDataflowConfig
+from repro.core import dataflows as df
+from repro.data.synthetic import lidar_scene
+from repro.models import minkunet
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--points", type=int, default=1500)
+    ap.add_argument("--capacity", type=int, default=2048)
+    ap.add_argument("--classes", type=int, default=19)
+    ap.add_argument("--ckpt-dir", default="/tmp/minkunet_ckpt")
+    ap.add_argument("--dataflow", default="implicit_gemm", choices=df.DATAFLOWS)
+    args = ap.parse_args()
+
+    cfg = minkunet.MinkUNetConfig(in_channels=4, num_classes=args.classes,
+                                  width=args.width, blocks_per_stage=1)
+    params = minkunet.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"MinkUNet width={args.width}: {n_params / 1e6:.1f}M params")
+
+    amap = {sig: TrainDataflowConfig.bind_all(df.DataflowConfig(args.dataflow))
+            for sig in set(minkunet.layer_signatures(cfg).values())}
+    ocfg = opt.AdamWConfig(lr=2e-3, weight_decay=0.01)
+    state = opt.init_opt_state(params, ocfg)
+
+    def data():
+        i = 0
+        while True:
+            st = lidar_scene(jax.random.PRNGKey(i), args.points, args.capacity,
+                             4, extent=40.0, voxel=0.5)
+            # synthetic labels: height-band segmentation (learnable signal)
+            z = st.coords[:, 3]
+            labels = jnp.clip(z // 2, 0, args.classes - 1).astype(jnp.int32)
+            yield {"scene": st, "labels": labels}
+            i += 1
+
+    @jax.jit
+    def step(params, state, batch):
+        st, labels = batch["scene"], batch["labels"]
+
+        def loss_fn(p):
+            lg = minkunet.apply(p, st, cfg, assignment=amap)
+            ls = jax.nn.log_softmax(lg)[jnp.arange(st.capacity), labels]
+            return -jnp.sum(jnp.where(st.valid_mask, ls, 0)) / jnp.maximum(st.num_valid, 1)
+
+        l, g = jax.value_and_grad(loss_fn)(params)
+        p2, s2, gn = opt.adamw_update(params, g, state, ocfg)
+        return p2, s2, {"loss": l, "grad_norm": gn}
+
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_every=50,
+                      ckpt_dir=args.ckpt_dir, log_every=10)
+    params, state, report = train_loop(step, params, state, data(), lcfg)
+    print(f"finished {report.steps_run} steps "
+          f"(resumed_from={report.resumed_from}); final {report.last_metrics}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Assigned architectures, input shapes and (arch × shape) cell definitions.
+
+Shapes are the assignment's four LM shapes; ``decode_*``/``long_*`` lower
+``serve_step`` (one token + KV cache), not ``train_step``.  ``long_500k``
+requires sub-quadratic attention and is skipped (recorded, not silently) for
+pure full-attention archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm_common import ArchConfig
+
+ARCH_IDS = (
+    "kimi_k2_1t_a32b", "mixtral_8x22b", "olmo_1b", "starcoder2_3b",
+    "qwen1_5_0_5b", "codeqwen1_5_7b", "musicgen_large", "falcon_mamba_7b",
+    "zamba2_7b", "llama_3_2_vision_90b",
+)
+
+# public ids (hyphenated) → module names
+ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCfg("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCfg("long_500k", "decode", 524288, 1),
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    mod_name = ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeCfg) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k decode skipped per assignment"
+    return True, ""
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    small = dict(
+        n_layers=max(2, (cfg.attn_every or 1) + 1) if cfg.family == "hybrid" else 2,
+        d_model=64, n_heads=4, kv_heads=max(1, min(cfg.kv_heads, 2)),
+        d_ff=128, vocab=128, head_dim=16, n_img_tokens=8 if cfg.cross_every else 0,
+        attn_chunk=32, loss_chunk=16, sliding_window=min(cfg.sliding_window, 32),
+    )
+    if cfg.moe is not None:
+        small["moe"] = dataclasses.replace(cfg.moe, n_experts=4, top_k=2, d_ff_expert=32)
+    if cfg.ssm is not None:
+        small["ssm"] = dataclasses.replace(cfg.ssm, d_state=8, head_dim=16, chunk=8)
+    if cfg.cross_every:
+        small["n_layers"] = (cfg.cross_every + 1) * 2  # two groups
+    if cfg.family == "hybrid":
+        small["n_layers"] = cfg.attn_every + 2         # one group + tail
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)
+
+
+def accounting_variant(cfg: ArchConfig, shape: ShapeCfg, depth: int) -> ArchConfig:
+    """Reduced-depth, scan-light config for the roofline accounting pass.
+
+    XLA cost_analysis counts while-loop bodies once, so the accounting pass
+    compiles fully-unrolled reduced-depth variants (REPRO_SCAN_UNROLL=full)
+    and extrapolates linearly in depth.  Inner chunk scans get trip counts
+    ≤ 4-8 so the unroll stays compilable; chunk sizes only re-tile the same
+    math, so FLOPs are unchanged and HBM bytes are ~chunk-invariant (the
+    O(S²) score traffic dominates regardless of tile)."""
+    over = dict(n_layers=depth,
+                attn_chunk=max(512, shape.seq // 4),
+                loss_chunk=max(512, shape.seq // 4))
+    if cfg.ssm is not None:
+        over["ssm"] = dataclasses.replace(cfg.ssm, chunk=max(128, shape.seq // 8))
+    return dataclasses.replace(cfg, **over)
+
+
+def depth_basis(cfg: ArchConfig):
+    """(depths, row(L), full_row) describing quantity(L) = basis · coeffs.
+
+    dense/moe/ssm/audio : q = c + L·per_layer            → depths (6, 10)
+    vlm                 : q = c + g·per_group (L = 5g)    → depths (10, 15)
+    hybrid (zamba2)     : q = c + n_mamba·m + n_shared·s  → depths (13, 19, 20)
+
+    Depths are deliberately NOT tiny: XLA's buffer assignment makes
+    bytes-per-layer mildly superlinear at shallow depth; validation against a
+    full-depth unrolled olmo_1b compile shows (6,10) keeps FLOPs within ~2%,
+    bytes within ~12% (under-estimate), collectives exact (EXPERIMENTS.md).
+    """
+    if cfg.family == "vlm":
+        u = cfg.cross_every + 1
+        return [2 * u, 3 * u], (lambda L: [1.0, L // u]), [1.0, cfg.n_layers // u]
+    if cfg.family == "hybrid":
+        e = cfg.attn_every
+
+        def row(L):
+            g = L // e
+            return [1.0, float(L), float(g)]
+
+        return [2 * e + 1, 3 * e + 1, 3 * e + 2], row, row(cfg.n_layers)
+    return [6, 10], (lambda L: [1.0, float(L)]), [1.0, float(cfg.n_layers)]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg, dtype=jnp.int32) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    from repro.models import api
+
+    b, s = shape.batch, shape.seq
+    f = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch = {"labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.embed_input:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), f)
+        if cfg.cross_every:
+            batch["img_emb"] = jax.ShapeDtypeStruct((b, cfg.n_img_tokens, cfg.d_model), f)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.embed_input:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), f)
+        if cfg.cross_every:
+            batch["img_emb"] = jax.ShapeDtypeStruct((b, cfg.n_img_tokens, cfg.d_model), f)
+        return batch
+    # decode: one token + cache
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, b, s))
+    token = (jax.ShapeDtypeStruct((b,), jnp.int32) if cfg.embed_input
+             else jax.ShapeDtypeStruct((b, cfg.d_model), f))
+    batch = {"token": token, "cache": cache}
+    return batch

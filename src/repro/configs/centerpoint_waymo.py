@@ -1,0 +1,6 @@
+"""The paper's detection workload: CenterPoint sparse backbone on Waymo-like
+synthetic scenes (WM-C in Fig. 14/15; SparseConv layers only)."""
+from repro.models.centerpoint import CenterPointConfig
+
+CONFIG = CenterPointConfig(in_channels=5, channels=(16, 32, 64, 128))
+CONFIG_BENCH = CenterPointConfig(in_channels=5, channels=(16, 32, 64, 128), width=0.5)

@@ -1,0 +1,8 @@
+"""CodeQwen1.5-7B — qwen1.5 arch [hf:Qwen/CodeQwen1.5-7B; hf]."""
+from repro.models.lm_common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="codeqwen1.5-7b", family="dense", n_layers=32, d_model=4096,
+    n_heads=32, kv_heads=32, d_ff=13440, vocab=92416, norm="rms",
+    mlp="swiglu", qkv_bias=True,
+)

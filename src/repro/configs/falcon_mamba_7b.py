@@ -1,0 +1,9 @@
+"""Falcon-Mamba-7B — mamba1 arch [arXiv:2410.05355; unverified]."""
+from repro.models.lm_common import ArchConfig, SSMCfg
+
+CONFIG = ArchConfig(
+    name="falcon-mamba-7b", family="ssm", n_layers=64, d_model=4096,
+    n_heads=1, kv_heads=1, d_ff=0, vocab=65024, norm="rms",
+    ssm=SSMCfg(d_state=16, expand=2, conv_kernel=4, version=1, chunk=128),
+    sub_quadratic=True,
+)

@@ -1,0 +1,15 @@
+"""Kimi K2 — trillion-parameter MoE (paper-table) [arXiv:2501.kimi2; unverified].
+
+61L d_model=7168 64H (GQA kv=8) expert d_ff=2048 vocab=163840, MoE 384e top-8.
+"""
+from repro.models.lm_common import ArchConfig, MoECfg
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe", n_layers=61, d_model=7168,
+    n_heads=64, kv_heads=8, d_ff=2048, vocab=163840, norm="rms", mlp="swiglu",
+    # dispatch="gspmd_sort" is the paper-faithful gather-GEMM-scatter
+    # baseline recorded in EXPERIMENTS.md §Roofline.  For deployment switch
+    # to dispatch="local_shardmap": 118x less collective traffic
+    # (EXPERIMENTS.md §Perf cycle 1; `python -m benchmarks.perf_hillclimb`).
+    moe=MoECfg(n_experts=384, top_k=8, d_ff_expert=2048, shard_experts=True),
+)

@@ -1,0 +1,14 @@
+"""Llama-3.2-Vision-90B — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+100 layers = 20 groups of (4 self-attn + 1 gated cross-attn); the vision
+frontend is a STUB per assignment: input_specs() provides precomputed patch
+embeddings (B, n_img_tokens, d_model).
+"""
+from repro.models.lm_common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b", family="vlm", n_layers=100, d_model=8192,
+    n_heads=64, kv_heads=8, d_ff=28672, vocab=128256, norm="rms", mlp="swiglu",
+    cross_every=4, n_img_tokens=1600,
+)

@@ -1,0 +1,9 @@
+"""The paper's own segmentation workload: MinkUNet on SemanticKITTI-like
+synthetic scenes (SK-M in Fig. 14/15).  Width 0.5 / 1.0 variants."""
+from repro.models.minkunet import MinkUNetConfig
+
+CONFIG_1X = MinkUNetConfig(in_channels=4, num_classes=19, width=1.0)
+CONFIG_05X = MinkUNetConfig(in_channels=4, num_classes=19, width=0.5)
+# benchmark-scale (CPU container) variant
+CONFIG_BENCH = MinkUNetConfig(in_channels=4, num_classes=19, width=0.25,
+                              blocks_per_stage=1)

@@ -1,0 +1,11 @@
+"""Mixtral 8x22B — 8 experts top-2, SWA [arXiv:2401.04088; hf]."""
+from repro.models.lm_common import ArchConfig, MoECfg
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b", family="moe", n_layers=56, d_model=6144,
+    n_heads=48, kv_heads=8, d_ff=16384, vocab=32768, norm="rms", mlp="swiglu",
+    sliding_window=4096,
+    # 8 experts don't divide the 16-way model axis: shard d_ff inside each
+    # expert (TP) instead of EP over experts.
+    moe=MoECfg(n_experts=8, top_k=2, d_ff_expert=16384, shard_experts=False),
+)

@@ -1,0 +1,13 @@
+"""MusicGen-large — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+Modality frontend is a STUB per assignment: input_specs() provides
+precomputed frame embeddings (B, S, d_model); the backbone is the standard
+decoder with the 2048-entry codebook head.
+"""
+from repro.models.lm_common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large", family="audio", n_layers=48, d_model=2048,
+    n_heads=32, kv_heads=32, d_ff=8192, vocab=2048, norm="ln", mlp="gelu",
+    embed_input=False,
+)

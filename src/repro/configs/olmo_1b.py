@@ -1,0 +1,8 @@
+"""OLMo-1B — non-parametric LN [arXiv:2402.00838; hf]."""
+from repro.models.lm_common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmo-1b", family="dense", n_layers=16, d_model=2048,
+    n_heads=16, kv_heads=16, d_ff=8192, vocab=50304, norm="nonparam",
+    mlp="swiglu", tie_embeddings=True,
+)

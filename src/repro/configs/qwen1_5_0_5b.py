@@ -1,0 +1,8 @@
+"""Qwen1.5-0.5B — QKV bias [hf:Qwen/Qwen1.5-0.5B; hf]."""
+from repro.models.lm_common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-0.5b", family="dense", n_layers=24, d_model=1024,
+    n_heads=16, kv_heads=16, d_ff=2816, vocab=151936, norm="rms",
+    mlp="swiglu", qkv_bias=True, tie_embeddings=True,
+)

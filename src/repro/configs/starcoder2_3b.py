@@ -1,0 +1,8 @@
+"""StarCoder2-3B — GQA (kv=2), RoPE, sliding window [arXiv:2402.19173; hf]."""
+from repro.models.lm_common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b", family="dense", n_layers=30, d_model=3072,
+    n_heads=24, kv_heads=2, d_ff=12288, vocab=49152, norm="ln", mlp="gelu",
+    qkv_bias=True, mlp_bias=True, sliding_window=4096,
+)

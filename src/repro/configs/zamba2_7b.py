@@ -1,0 +1,9 @@
+"""Zamba2-7B — Mamba2 + shared attention blocks [arXiv:2411.15242; unverified]."""
+from repro.models.lm_common import ArchConfig, SSMCfg
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid", n_layers=81, d_model=3584,
+    n_heads=32, kv_heads=32, d_ff=14336, vocab=32000, norm="rms", mlp="swiglu",
+    ssm=SSMCfg(d_state=64, expand=2, conv_kernel=4, head_dim=64, version=2, chunk=128),
+    attn_every=6, sub_quadratic=True,
+)

@@ -1,0 +1,138 @@
+"""Sparse Autotuner (paper §4): group-based greedy configuration tuning.
+
+Key paper observations baked in:
+
+* Layers sharing the same kernel map form a **group** and must run the same
+  dataflow (different dataflows need different map structures; generating
+  both costs ~3-4 conv layers of latency — §4.2).
+* The objective is **end-to-end latency** of the whole network, never
+  per-kernel time: mapping overhead (bitmask building, sorting, reordering)
+  makes kernel-time rankings unreliable (Tables 3 vs 4).
+* Greedy group-by-group search is linear in the design space because group
+  latencies are independent; groups may be non-consecutive in U-Nets, which
+  is why each measurement is still end-to-end.
+* Training tunes three kernels (fwd/dgrad/wgrad) with **partial binding**
+  (Fig. 13) in two re-uses of the same group tuner — O(K), not O(K³).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core import dataflows as df
+from repro.core.sparse_conv import TrainDataflowConfig
+
+
+def timeit_fn(fn: Callable[[], object], warmup: int = 1, iters: int = 3) -> float:
+    """Best-of-n wall-clock seconds of a nullary (already jitted) callable."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+@dataclasses.dataclass
+class GroupInfo:
+    """A set of layers sharing one kernel map (same in/out coords, stride, K)."""
+
+    name: str
+    layer_names: List[str]
+
+
+def partition_groups(layer_signatures: Dict[str, tuple]) -> List[GroupInfo]:
+    """Group layers by map signature: (in_stride, out_stride, kernel_size,
+    transposed-source).  Matches the paper's Fig. 12 partition."""
+    by_sig: Dict[tuple, List[str]] = {}
+    for name, sig in layer_signatures.items():
+        by_sig.setdefault(sig, []).append(name)
+    return [GroupInfo(name=f"g{i}_{sig}", layer_names=layers)
+            for i, (sig, layers) in enumerate(sorted(by_sig.items(), key=str))]
+
+
+class Autotuner:
+    """Greedy group tuner.
+
+    measure(assignment) must return *end-to-end* latency (seconds) of the
+    workload when group g uses dataflow config assignment[g.name].
+    """
+
+    def __init__(self, groups: Sequence[GroupInfo],
+                 space: Sequence[df.DataflowConfig],
+                 measure: Callable[[Dict[str, object]], float],
+                 default: Optional[df.DataflowConfig] = None):
+        self.groups = list(groups)
+        self.space = list(space)
+        self.measure = measure
+        self.default = default or df.DEFAULT_CONFIG
+        self.log: List[tuple] = []
+
+    def tune(self) -> Dict[str, df.DataflowConfig]:
+        best: Dict[str, df.DataflowConfig] = {g.name: self.default for g in self.groups}
+        for g in self.groups:
+            results = []
+            for cand in self.space:
+                trial = dict(best)
+                trial[g.name] = cand
+                lat = self.measure(trial)
+                results.append((lat, cand))
+                self.log.append((g.name, cand, lat))
+            lat, cand = min(results, key=lambda r: r[0])
+            best[g.name] = cand
+        return best
+
+
+class TrainingAutotuner:
+    """Two-pass training tuner with partial parameter binding (Fig. 13).
+
+    scheme='bind_fwd_dgrad'  : workload-pattern oriented (low-parallelism
+        devices — 2080 Ti class);
+    scheme='bind_dgrad_wgrad': sparse-mapping oriented (high-parallelism
+        devices — A100 class; mapping overhead dominates so dgrad+wgrad share
+        maps/params).
+    measure(assignment) gets Dict[group, TrainDataflowConfig] and returns
+    end-to-end train-step latency.
+    """
+
+    def __init__(self, groups, space, measure, scheme: str = "bind_dgrad_wgrad"):
+        assert scheme in ("bind_fwd_dgrad", "bind_dgrad_wgrad", "bind_all")
+        self.groups, self.space, self.measure, self.scheme = list(groups), list(space), measure, scheme
+
+    @staticmethod
+    def choose_scheme(high_parallelism: bool) -> str:
+        return "bind_dgrad_wgrad" if high_parallelism else "bind_fwd_dgrad"
+
+    def tune(self) -> Dict[str, TrainDataflowConfig]:
+        if self.scheme == "bind_all":
+            tuner = Autotuner(self.groups, self.space,
+                              lambda a: self.measure({k: TrainDataflowConfig.bind_all(v)
+                                                      for k, v in a.items()}))
+            return {k: TrainDataflowConfig.bind_all(v) for k, v in tuner.tune().items()}
+
+        if self.scheme == "bind_fwd_dgrad":
+            # pass 1: tune the (fwd,dgrad) pair with default wgrad
+            t1 = Autotuner(self.groups, self.space,
+                           lambda a: self.measure({k: TrainDataflowConfig.bind_fwd_dgrad(v, df.DEFAULT_CONFIG)
+                                                   for k, v in a.items()}))
+            bound = t1.tune()
+            # pass 2: tune wgrad given the fixed pair
+            t2 = Autotuner(self.groups, self.space,
+                           lambda a: self.measure({k: TrainDataflowConfig.bind_fwd_dgrad(bound[k], a[k])
+                                                   for k in a}))
+            wg = t2.tune()
+            return {k: TrainDataflowConfig.bind_fwd_dgrad(bound[k], wg[k]) for k in bound}
+
+        # bind_dgrad_wgrad
+        t1 = Autotuner(self.groups, self.space,
+                       lambda a: self.measure({k: TrainDataflowConfig.bind_all(v)
+                                               for k, v in a.items()}))
+        fwd = t1.tune()
+        t2 = Autotuner(self.groups, self.space,
+                       lambda a: self.measure({k: TrainDataflowConfig.bind_dgrad_wgrad(fwd[k], a[k])
+                                               for k in a}))
+        bw = t2.tune()
+        return {k: TrainDataflowConfig.bind_dgrad_wgrad(fwd[k], bw[k]) for k in fwd}

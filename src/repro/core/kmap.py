@@ -1,0 +1,291 @@
+"""Kernel-map construction: the "mapping operators" of the paper.
+
+A kernel map relates output points to input points for every kernel offset
+δ ∈ Δ^D(K).  Two representations exist (paper §4.2) and each dataflow needs
+its own:
+
+* **output-stationary** ``m_out[n, k]`` — index of the input neighbor of
+  output ``n`` at offset ``k`` (or -1).  Required by implicit GEMM.
+* **weight-stationary** ``(ws_in[k, i], ws_out[k, i])`` for ``i < ws_count[k]``
+  — the per-offset gather/scatter lists.  Required by gather-GEMM-scatter and
+  fetch-on-demand.
+
+On top of the raw map we build the paper's redundancy-reduction machinery:
+per-output neighbor **bitmasks**, bitmask **sorting** (Fig. 6), arbitrary
+**mask splits** (Fig. 10) and per-(tile, δ) occupancy masks — the TPU analogue
+of warp-level skipping (DESIGN.md §2).
+
+Everything is static-shape: maps are built at the capacity of the output
+tensor and padded with -1 rows, which is precisely the paper's §3.2 padding
+trick (no bounds check in the kernel inner loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.sparse_tensor import INVALID_COORD, SparseTensor
+
+
+def kernel_offsets(kernel_size: int, ndim: int) -> np.ndarray:
+    """Δ^D(K) as an (K^D, D) int array.
+
+    Odd K: centered window {-(K//2)..K//2}^D (submanifold convention).
+    Even K: forward window {0..K-1}^D (downsampling convention, e.g. K=2,s=2).
+    The *center-first* ordering puts δ=0 (or the lowest corner for even K)
+    first: the center offset is always dense for submanifold convs, and
+    leading with it makes split 0 the "dense" split.
+    """
+    if kernel_size % 2 == 1:
+        r = range(-(kernel_size // 2), kernel_size // 2 + 1)
+    else:
+        r = range(kernel_size)
+    offs = np.array(list(itertools.product(r, repeat=ndim)), dtype=np.int32)
+    # center-first ordering
+    norm = np.abs(offs).sum(axis=1)
+    order = np.argsort(norm, kind="stable")
+    return offs[order]
+
+
+def _bitmask(hit: jax.Array) -> jax.Array:
+    """Neighbor bitmask (paper Fig. 6) in int32.  Kernel volumes ≤ 31 pack
+    exactly; larger volumes use a (popcount << 24 | low-24-bits) composite — a
+    rank-preserving proxy that keeps rows with similar occupancy adjacent
+    after sorting (x64 stays disabled framework-wide)."""
+    kd = hit.shape[-1]
+    if kd <= 31:
+        return jnp.sum(jnp.where(hit, jnp.int32(1) << jnp.arange(kd, dtype=jnp.int32), 0), axis=-1)
+    pop = jnp.sum(hit, axis=-1).astype(jnp.int32)
+    low = jnp.sum(jnp.where(hit[..., :24], jnp.int32(1) << jnp.arange(24, dtype=jnp.int32), 0), axis=-1)
+    return (pop << 24) | low
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KernelMap:
+    """All map representations for one (layer-group) convolution."""
+
+    m_out: jax.Array          # (N_out_cap, KD) int32, -1 = missing
+    out_coords: jax.Array     # (N_out_cap, 1+D) int32
+    n_out: jax.Array          # () int32
+    ws_in: jax.Array          # (KD, cap) int32 gather indices (-1 pad)
+    ws_out: jax.Array         # (KD, cap) int32 scatter indices (-1 pad)
+    ws_count: jax.Array       # (KD,) int32
+    bitmask: jax.Array        # (N_out_cap,) int64 neighbor bitmask (0 pad)
+    out_stride: int = dataclasses.field(metadata=dict(static=True), default=1)
+    kernel_size: int = dataclasses.field(metadata=dict(static=True), default=3)
+
+    @property
+    def volume(self) -> int:
+        return self.m_out.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.m_out.shape[0]
+
+
+def _unique_coords(coords: jax.Array, valid: jax.Array, capacity: int):
+    """Sort-unique of coordinate rows; returns (coords[capacity], count)."""
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    words = jnp.where(valid[:, None], coords.astype(jnp.int32), big)
+    order = hashing.lex_argsort(words)
+    coords_s = coords[order]
+    valid_s = valid[order]
+    same_as_prev = hashing.rows_equal(coords_s[1:], coords_s[:-1])
+    is_first = jnp.concatenate([jnp.ones((1,), bool), ~same_as_prev]) & valid_s
+    dest = jnp.where(is_first, jnp.cumsum(is_first) - 1, capacity)
+    out = jnp.full((capacity + 1, coords.shape[1]), INVALID_COORD, jnp.int32)
+    out = out.at[dest].set(coords_s, mode="drop")
+    return out[:capacity], jnp.minimum(jnp.sum(is_first), capacity).astype(jnp.int32)
+
+
+def build_kmap(x: SparseTensor, kernel_size: int, stride: int = 1,
+               transposed: bool = False, out_coords: Optional[jax.Array] = None,
+               n_out: Optional[jax.Array] = None, out_capacity: Optional[int] = None) -> KernelMap:
+    """Build the kernel map for a sparse convolution over ``x``.
+
+    stride == 1                 : submanifold conv, outputs = inputs.
+    stride > 1, not transposed  : downsample; outputs = unique(floor-grid).
+    transposed                  : upsample (inverse conv); ``out_coords`` (the
+        cached finer coordinates) and ``n_out`` must be given.
+    """
+    d = x.ndim_space
+    t = x.stride
+    offs = kernel_offsets(kernel_size, d)
+    kd = offs.shape[0]
+    cap_in = x.capacity
+    table = hashing.SortedCoords(x.coords, x.valid_mask)
+
+    if transposed:
+        assert out_coords is not None and n_out is not None
+        out_stride = t // stride
+        assert out_stride >= 1
+        n_out_cap = out_capacity or out_coords.shape[0]
+        out_coords = out_coords[:n_out_cap]
+        # neighbor input coord = out + δ * out_stride mirrored (q = p - δ·t_f)
+        delta_scale = -out_stride
+    elif stride == 1:
+        out_coords, n_out = x.coords, x.num_valid
+        out_stride = t
+        n_out_cap = out_capacity or cap_in
+        out_coords = out_coords[:n_out_cap]
+        delta_scale = t
+    else:
+        out_stride = t * stride
+        n_out_cap = out_capacity or cap_in
+        grid = jnp.concatenate(
+            [x.coords[:, :1],
+             (x.coords[:, 1:] // out_stride) * out_stride], axis=1)
+        grid = jnp.where(x.valid_mask[:, None], grid, INVALID_COORD)
+        out_coords, n_out = _unique_coords(grid, x.valid_mask, n_out_cap)
+        delta_scale = t
+
+    out_valid = jnp.arange(n_out_cap) < n_out
+
+    # Output-stationary map: one hash query per offset (vectorized over rows).
+    def query(off):
+        shift = jnp.concatenate([jnp.zeros((1,), jnp.int32), off * delta_scale])
+        q = out_coords + shift[None, :]
+        q = jnp.where(out_valid[:, None], q, INVALID_COORD)
+        return table.lookup(q)
+
+    m_out = jax.vmap(query, in_axes=0, out_axes=1)(jnp.asarray(offs))  # (N_out_cap, KD)
+    m_out = jnp.where(out_valid[:, None], m_out, -1)
+
+    # Weight-stationary lists: stable-compact valid rows of each column.
+    hit = m_out >= 0  # (N_out_cap, KD)
+    ws_count = jnp.sum(hit, axis=0).astype(jnp.int32)
+
+    def compact(col_hit, col_idx):
+        order = jnp.argsort(~col_hit)  # valid rows first, stable
+        in_idx = jnp.where(col_hit[order], col_idx[order], -1)
+        out_idx = jnp.where(col_hit[order], order, -1)
+        return in_idx.astype(jnp.int32), out_idx.astype(jnp.int32)
+
+    ws_in, ws_out = jax.vmap(compact, in_axes=(1, 1), out_axes=0)(hit, m_out)
+
+    bm = jnp.where(out_valid, _bitmask(hit), 0)
+
+    return KernelMap(m_out=m_out, out_coords=out_coords, n_out=jnp.asarray(n_out, jnp.int32),
+                     ws_in=ws_in, ws_out=ws_out, ws_count=ws_count, bitmask=bm,
+                     out_stride=out_stride, kernel_size=kernel_size)
+
+
+def transpose_kmap(fwd: KernelMap, x_fine: SparseTensor) -> KernelMap:
+    """Kernel map of the inverse (transposed) conv from a cached forward map.
+
+    UNet decoders reuse the encoder's maps (paper: layers in the same *group*
+    share maps).  We rebuild output-stationary structure for the fine outputs
+    by swapping the weight-stationary pair lists.
+    """
+    kd = fwd.volume
+    cap = x_fine.capacity
+    # m_out for the fine side: column k of the transposed conv pairs
+    # (in=coarse=fwd ws_out rows, out=fine=fwd ws_in rows).
+    def col(k):
+        m = jnp.full((cap,), -1, jnp.int32)
+        src = fwd.ws_out[k]   # coarse index (input of transposed conv)
+        dst = fwd.ws_in[k]    # fine index (output of transposed conv)
+        ok = dst >= 0
+        return m.at[jnp.where(ok, dst, cap)].set(jnp.where(ok, src, -1), mode="drop")
+
+    m_out = jax.vmap(col, out_axes=1)(jnp.arange(kd))
+    bm = _bitmask(m_out >= 0)
+    return KernelMap(m_out=m_out, out_coords=x_fine.coords, n_out=x_fine.num_valid,
+                     ws_in=fwd.ws_out, ws_out=fwd.ws_in, ws_count=fwd.ws_count,
+                     bitmask=bm, out_stride=x_fine.stride, kernel_size=fwd.kernel_size)
+
+
+# ---------------------------------------------------------------------------
+# Sorting + mask splits (Sparse Autotuner design-space, paper §4.1)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    """Row orders and offset ranges for s-split (un)sorted implicit GEMM.
+
+    order[s]   : (N_out_cap,) permutation of output rows for split s.
+    inv_order[s]: inverse permutations (to undo the reordering on write-back).
+    ranges     : static ((start, end), ...) partition of the KD offsets.
+    sorted_    : False ⇒ identity order (paper's "unsorted", split=0 case).
+    """
+
+    order: jax.Array       # (S, N_out_cap) int32
+    inv_order: jax.Array   # (S, N_out_cap) int32
+    ranges: Tuple[Tuple[int, int], ...] = dataclasses.field(metadata=dict(static=True))
+    sorted_: bool = dataclasses.field(metadata=dict(static=True), default=True)
+
+    @property
+    def num_splits(self) -> int:
+        return len(self.ranges)
+
+
+def split_ranges(volume: int, n_splits: int) -> Tuple[Tuple[int, int], ...]:
+    """Partition KD offsets into ~equal contiguous ranges."""
+    n_splits = max(1, min(n_splits, volume))
+    bounds = np.linspace(0, volume, n_splits + 1).round().astype(int)
+    return tuple((int(bounds[i]), int(bounds[i + 1])) for i in range(n_splits))
+
+
+def make_split_plan(kmap: KernelMap, n_splits: int, sort: bool = True) -> SplitPlan:
+    """Paper Fig. 10: split the δ loop into s parts, argsort each split's
+    bitmask independently and reorder rows per split.  ``n_splits=1, sort``
+    reproduces SpConv v2 (Fig. 6); ``sort=False`` is the unsorted dataflow
+    (Fig. 5) the paper re-adds to the design space."""
+    ranges = split_ranges(kmap.volume, n_splits)
+    cap = kmap.capacity
+    hit = kmap.m_out >= 0
+    valid = jnp.arange(cap) < kmap.n_out
+
+    orders = []
+    for (a, b) in ranges:
+        if not sort:
+            orders.append(jnp.arange(cap, dtype=jnp.int32))
+            continue
+        bm = _bitmask(hit[:, a:b])
+        # valid rows first (sorted by bitmask), padding last
+        key = jnp.where(valid, bm, jnp.iinfo(jnp.int32).max)
+        orders.append(jnp.argsort(key).astype(jnp.int32))
+    order = jnp.stack(orders)
+    inv = jax.vmap(lambda o: jnp.argsort(o).astype(jnp.int32))(order)
+    return SplitPlan(order=order, inv_order=inv, ranges=ranges, sorted_=sort)
+
+
+def tile_occupancy(kmap: KernelMap, plan: SplitPlan, tile_m: int) -> jax.Array:
+    """Per-(split, tile, δ) occupancy: 1 iff any row of the tile has a
+    neighbor at δ within the split's range (else the whole MXU tile matmul is
+    skipped — the TPU analogue of warp-level zero skipping).
+
+    Returns (S, n_tiles, KD) int32 (columns outside the split's range are 0).
+    """
+    cap = kmap.capacity
+    assert cap % tile_m == 0, "capacity must be padded to tile_m (paper §3.2)"
+    n_tiles = cap // tile_m
+    hit = (kmap.m_out >= 0).astype(jnp.int32)
+
+    def per_split(order, rng):
+        a, b = rng
+        h = hit[order].reshape(n_tiles, tile_m, kmap.volume)
+        occ = jnp.max(h, axis=1)
+        col_in_range = (jnp.arange(kmap.volume) >= a) & (jnp.arange(kmap.volume) < b)
+        return occ * col_in_range[None, :].astype(jnp.int32)
+
+    return jnp.stack([per_split(plan.order[i], r) for i, r in enumerate(plan.ranges)])
+
+
+def redundancy_stats(kmap: KernelMap, plan: SplitPlan, tile_m: int) -> dict:
+    """Effective vs issued MACs (paper Fig. 11): issued = Σ occupied tiles ×
+    tile_m; effective = Σ hits.  The autotuner's analytic cost model reads
+    these."""
+    occ = tile_occupancy(kmap, plan, tile_m)
+    issued_rows = jnp.sum(occ) * tile_m
+    effective = jnp.sum(kmap.m_out >= 0)
+    return dict(issued_rows=issued_rows, effective_rows=effective,
+                overhead=issued_rows / jnp.maximum(effective, 1))

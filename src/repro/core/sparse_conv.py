@@ -1,0 +1,116 @@
+"""SparseConv layer: the paper's operator as a composable JAX module.
+
+Training support (paper §4.2/Fig. 13): forward, dgrad and wgrad are *three
+different kernels* with independently tunable dataflow parameters.  We express
+that with a ``custom_vjp`` whose backward pass dispatches on the layer's
+``TrainDataflowConfig`` — the exact mechanism the Sparse Autotuner's binding
+schemes tune.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dataflows as df
+from repro.core.kmap import KernelMap, build_kmap, transpose_kmap
+from repro.core.sparse_tensor import SparseTensor
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainDataflowConfig:
+    """Per-layer(-group) dataflow parameters for fwd / dgrad / wgrad."""
+
+    fwd: df.DataflowConfig = df.DEFAULT_CONFIG
+    dgrad: df.DataflowConfig = df.DEFAULT_CONFIG
+    wgrad: df.DataflowConfig = df.DEFAULT_CONFIG
+
+    # Binding schemes (paper Fig. 13): construct coupled configs.
+    @staticmethod
+    def bind_all(cfg: df.DataflowConfig) -> "TrainDataflowConfig":
+        return TrainDataflowConfig(cfg, cfg, cfg)
+
+    @staticmethod
+    def bind_fwd_dgrad(cfg: df.DataflowConfig, wgrad: df.DataflowConfig) -> "TrainDataflowConfig":
+        """Workload-pattern oriented (low-parallelism devices)."""
+        return TrainDataflowConfig(cfg, cfg, wgrad)
+
+    @staticmethod
+    def bind_dgrad_wgrad(fwd: df.DataflowConfig, cfg: df.DataflowConfig) -> "TrainDataflowConfig":
+        """Sparse-mapping oriented (high-parallelism devices)."""
+        return TrainDataflowConfig(fwd, cfg, cfg)
+
+
+DEFAULT_TRAIN_CONFIG = TrainDataflowConfig()
+
+
+def sparse_conv_apply(feats: jax.Array, w: jax.Array, kmap: KernelMap,
+                      cfg: TrainDataflowConfig = DEFAULT_TRAIN_CONFIG) -> jax.Array:
+    """Differentiable sparse conv with decoupled fwd/dgrad/wgrad dataflows."""
+
+    @jax.custom_vjp
+    def f(feats, w):
+        return df.sparse_conv_forward(feats, w, kmap, cfg.fwd)
+
+    def f_fwd(feats, w):
+        return f(feats, w), (feats, w)
+
+    def f_bwd(res, dy):
+        feats_, w_ = res
+        dx = df.sparse_conv_dgrad(dy, w_, kmap, cfg.dgrad)
+        dw = df.sparse_conv_wgrad(feats_, dy, kmap, cfg.wgrad)
+        return dx, dw
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(feats, w)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    in_channels: int
+    out_channels: int
+    kernel_size: int = 3
+    stride: int = 1
+    transposed: bool = False
+    bias: bool = False
+
+    @property
+    def volume(self) -> int:
+        return self.kernel_size ** 3  # models here are 3D
+
+
+def init_conv(key: jax.Array, spec: ConvSpec, ndim: int = 3, dtype=jnp.float32) -> dict:
+    kd = spec.kernel_size ** ndim
+    fan_in = spec.in_channels * kd
+    w = jax.random.normal(key, (kd, spec.in_channels, spec.out_channels), dtype) * (fan_in ** -0.5)
+    params = {"w": w}
+    if spec.bias:
+        params["b"] = jnp.zeros((spec.out_channels,), dtype)
+    return params
+
+
+def apply_conv(params: dict, x: SparseTensor, kmap: KernelMap,
+               cfg: TrainDataflowConfig = DEFAULT_TRAIN_CONFIG) -> SparseTensor:
+    """Apply a sparse conv given a prebuilt kernel map; returns the output
+    SparseTensor on the map's coordinates."""
+    y = sparse_conv_apply(x.feats, params["w"], kmap, cfg)
+    if "b" in params:
+        y = y + params["b"][None, :]
+    valid = jnp.arange(kmap.capacity) < kmap.n_out
+    y = jnp.where(valid[:, None], y, 0)
+    return SparseTensor(coords=kmap.out_coords, feats=y, num_valid=kmap.n_out,
+                        stride=kmap.out_stride)
+
+
+def conv_kmap(x: SparseTensor, spec: ConvSpec,
+              cached_fine: Optional[SparseTensor] = None,
+              cached_fwd: Optional[KernelMap] = None) -> KernelMap:
+    """Build (or derive) the kernel map for ``spec`` applied to ``x``.
+
+    Decoder (transposed) convs reuse the encoder's map (paper: same group)."""
+    if spec.transposed:
+        assert cached_fwd is not None and cached_fine is not None
+        return transpose_kmap(cached_fwd, cached_fine)
+    return build_kmap(x, spec.kernel_size, spec.stride)

@@ -1,0 +1,118 @@
+"""Capacity-padded sparse tensors.
+
+The paper's workloads are point clouds with *dynamic* point counts.  JAX traces
+static shapes, so every sparse tensor in this framework carries a static
+capacity ``Nmax`` plus the number of valid rows.  Invalid rows hold the
+sentinel coordinate ``INVALID_COORD`` which never matches a hash query, so all
+kernel-map machinery is oblivious to padding.  This is the static-shape
+analogue of the paper's dynamic-shape kernels (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel for padded coordinate rows.  Chosen so that shifted/strided variants
+# of a padded coordinate also never collide with a real voxel key.
+INVALID_COORD = jnp.int32(0x3FFFFFF)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseTensor:
+    """A batched, quantized point cloud (or any D-dim sparse feature map).
+
+    coords: (Nmax, 1 + D) int32 — [batch, x, y, z, ...]; padded rows are
+        INVALID_COORD in every spatial column.
+    feats:  (Nmax, C) — feature rows; padded rows are zero.
+    num_valid: () int32 — number of real rows.
+    stride: static int — the tensor stride (grows by conv stride).
+    """
+
+    coords: jax.Array
+    feats: jax.Array
+    num_valid: jax.Array
+    stride: int = dataclasses.field(metadata=dict(static=True), default=1)
+
+    @property
+    def capacity(self) -> int:
+        return self.coords.shape[0]
+
+    @property
+    def ndim_space(self) -> int:
+        return self.coords.shape[1] - 1
+
+    @property
+    def num_channels(self) -> int:
+        return self.feats.shape[1]
+
+    @property
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity) < self.num_valid
+
+    def replace_feats(self, feats: jax.Array) -> "SparseTensor":
+        return dataclasses.replace(self, feats=feats)
+
+
+def make_sparse_tensor(coords: jax.Array, feats: jax.Array, num_valid, stride: int = 1) -> SparseTensor:
+    """Build a SparseTensor, forcing padded rows to sentinel/zero."""
+    n = coords.shape[0]
+    mask = jnp.arange(n) < num_valid
+    coords = jnp.where(mask[:, None], coords.astype(jnp.int32), INVALID_COORD)
+    feats = jnp.where(mask[:, None], feats, 0)
+    return SparseTensor(coords=coords, feats=feats, num_valid=jnp.asarray(num_valid, jnp.int32), stride=stride)
+
+
+@partial(jax.jit, static_argnames=("capacity", "batch_size"))
+def voxelize(points: jax.Array, feats: jax.Array, voxel_size: float, capacity: int,
+             batch_idx: Optional[jax.Array] = None, batch_size: int = 1) -> SparseTensor:
+    """Quantize raw points to voxel coordinates and deduplicate.
+
+    points: (N, D) float — raw coordinates.
+    feats:  (N, C) — per-point features (first point in each voxel wins; the
+        paper keeps one point per voxel, matching CenterPoint preprocessing).
+    Returns a SparseTensor with static ``capacity`` rows.
+    """
+    n, d = points.shape
+    if batch_idx is None:
+        batch_idx = jnp.zeros((n,), jnp.int32)
+    q = jnp.floor(points / voxel_size).astype(jnp.int32)
+    coords = jnp.concatenate([batch_idx[:, None].astype(jnp.int32), q], axis=1)
+    #
+
+    # Deduplicate via lexicographic sort; first occurrence wins.
+    from repro.core import hashing
+
+    order = hashing.lex_argsort(coords)
+    coords_sorted = coords[order]
+    same_as_prev = hashing.rows_equal(coords_sorted[1:], coords_sorted[:-1])
+    is_first = jnp.concatenate([jnp.ones((1,), bool), ~same_as_prev])
+    # Stable compaction of the first-occurrence rows.
+    dest = jnp.cumsum(is_first) - 1
+    dest = jnp.where(is_first, dest, capacity)  # drop dups past the end
+    out_coords = jnp.full((capacity + 1, d + 1), INVALID_COORD, jnp.int32)
+    out_feats = jnp.zeros((capacity + 1, feats.shape[1]), feats.dtype)
+    out_coords = out_coords.at[dest].set(coords[order], mode="drop")
+    out_feats = out_feats.at[dest].set(feats[order], mode="drop")
+    num = jnp.minimum(jnp.sum(is_first), capacity)
+    return SparseTensor(coords=out_coords[:capacity], feats=out_feats[:capacity],
+                        num_valid=num.astype(jnp.int32), stride=1)
+
+
+def to_dense(st: SparseTensor, grid: tuple, batch_size: int) -> jax.Array:
+    """Scatter a SparseTensor to a dense (B, *grid, C) array (test oracle)."""
+    d = st.ndim_space
+    assert len(grid) == d
+    mask = st.valid_mask
+    idx = [jnp.where(mask, st.coords[:, 0], batch_size)]  # OOB batch drops row
+    for i in range(d):
+        c = st.coords[:, 1 + i] // st.stride
+        idx.append(jnp.where(mask & (c >= 0) & (c < grid[i]), c, grid[i]))
+    dense = jnp.zeros((batch_size + 1,) + tuple(g + 1 for g in grid) + (st.num_channels,), st.feats.dtype)
+    dense = dense.at[tuple(idx)].add(st.feats, mode="drop")
+    slicer = (slice(0, batch_size),) + tuple(slice(0, g) for g in grid) + (slice(None),)
+    return dense[slicer]

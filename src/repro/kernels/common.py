@@ -1,0 +1,24 @@
+"""Shared helpers for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_rows(x: jax.Array, multiple: int, value=0) -> jax.Array:
+    """Pad the leading dim of ``x`` to a multiple (paper §3.2 padding trick)."""
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run in interpret mode unless a real TPU is attached."""
+    return jax.default_backend() != "tpu"

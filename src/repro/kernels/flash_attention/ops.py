@@ -1,0 +1,26 @@
+"""Jit'd wrapper: GQA head broadcast + shape glue for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Hkv, T, D). Returns (B, H, S, D)."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    out = flash_attention_pallas(
+        q.reshape(b * h, s, d), k.reshape(b * h, t, d), v.reshape(b * h, t, d),
+        causal=causal, block_q=min(block_q, s), block_k=min(block_k, t),
+        interpret=interpret)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for blockwise (flash) attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+            scale: float | None = None) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Hkv, T, D) with H % Hkv == 0 (GQA)."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    qq = q.reshape(b, hkv, g, s, d)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qq.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,35 @@
+"""Jit'd wrapper: splits + sorting + padding around the implicit-GEMM kernel.
+
+The Sparse Kernel Generator (core/generator.py) picks ``tile_m/tile_n`` and
+the Sparse Autotuner picks ``n_splits``/``sorted``; this wrapper is the glue
+that turns a (KernelMap, SplitPlan) pair into pallas_call invocations plus the
+split-sum reduction of paper Fig. 10.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmap import KernelMap, SplitPlan
+from repro.kernels.common import default_interpret
+from repro.kernels.implicit_gemm.implicit_gemm import implicit_gemm_pallas
+
+
+def implicit_gemm(x: jax.Array, w: jax.Array, kmap: KernelMap, plan: SplitPlan,
+                  *, tile_m: int = 128, tile_n: int = 128,
+                  interpret: bool | None = None) -> jax.Array:
+    """Full sparse conv via (split, sorted) implicit GEMM. Returns (N_out_cap, Cout)."""
+    if interpret is None:
+        interpret = default_interpret()
+    cap = kmap.capacity
+    cout = w.shape[-1]
+    assert cap % tile_m == 0, "choose capacities as multiples of tile_m"
+    out = jnp.zeros((cap, cout), x.dtype)
+    for s, (a, b) in enumerate(plan.ranges):
+        order = plan.order[s]
+        midx = kmap.m_out[order][:, a:b]
+        occ = (midx.reshape(cap // tile_m, tile_m, b - a) >= 0).any(axis=1).astype(jnp.int32)
+        partial = implicit_gemm_pallas(midx, occ, x, w[a:b], tile_m=tile_m,
+                                       tile_n=tile_n, interpret=interpret)
+        out = out + partial[plan.inv_order[s]]
+    return out

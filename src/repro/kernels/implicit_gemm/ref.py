@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the implicit-GEMM sparse convolution kernel.
+
+out[n] = Σ_k  x[m[n, k]] @ w[k]      (m[n, k] == -1 contributes zero)
+
+This is the dense-GEMM-with-sparse-iterator formulation of paper §3.1
+(X^{im2col-in} never materialized here either: the gather is fused by XLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def implicit_gemm_ref(x: jax.Array, w: jax.Array, m: jax.Array,
+                      acc_dtype=jnp.float32) -> jax.Array:
+    """x: (N_in, Cin); w: (KD, Cin, Cout); m: (N_out, KD) int32 → (N_out, Cout)."""
+    n_out, kd = m.shape
+    cout = w.shape[-1]
+
+    def body(acc, k):
+        idx = m[:, k]
+        rows = jnp.where((idx >= 0)[:, None], x[jnp.clip(idx, 0)], 0)
+        return acc + jnp.dot(rows.astype(acc_dtype), w[k].astype(acc_dtype)), None
+
+    acc0 = jnp.zeros((n_out, cout), acc_dtype)
+    acc, _ = jax.lax.scan(body, acc0, jnp.arange(kd))
+    return acc.astype(x.dtype)

@@ -1,0 +1,32 @@
+"""Jit'd wrapper: (B, S, H, P) model layout → per-(b,h) kernel layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_pallas
+
+
+def ssd_scan(xh: jax.Array, dt: jax.Array, a_log: jax.Array, b_ssm: jax.Array,
+             c_ssm: jax.Array, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """Drop-in for models.mamba2._ssd_chunked on TPU.
+
+    xh: (B, S, H, P); dt: (B, S, H); a_log: (H,); b/c: (B, S, N).
+    Returns (y (B, S, H, P) f32, h_final (B, H, N, P) f32)."""
+    if interpret is None:
+        interpret = default_interpret()
+    bsz, s, h, p = xh.shape
+    n = b_ssm.shape[-1]
+    a = (-jnp.exp(a_log.astype(jnp.float32)) * dt)           # (B, S, H)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    # (B, S, H, ·) → (B·H, S, ·); B/C shared across heads → broadcast
+    a_bh = a.transpose(0, 2, 1).reshape(bsz * h, s)
+    x_bh = xdt.transpose(0, 2, 1, 3).reshape(bsz * h, s, p)
+    b_bh = jnp.broadcast_to(b_ssm[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    c_bh = jnp.broadcast_to(c_ssm[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    y, hf = ssd_chunk_pallas(a_bh, x_bh, b_bh, c_bh, chunk=min(chunk, s),
+                             interpret=interpret)
+    y = y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    return y, hf.reshape(bsz, h, n, p)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD chunk kernel: the exact sequential recurrence.
+
+h_t = exp(a_t) · h_{t-1} + b_t ⊗ xdt_t        (h: (N, P))
+y_t = c_t · h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(a: jax.Array, xdt: jax.Array, b: jax.Array, c: jax.Array):
+    """a: (BH, S) log-decay; xdt: (BH, S, P); b/c: (BH, S, N).
+
+    Returns (y (BH, S, P), h_final (BH, N, P)) in f32."""
+    bh, s = a.shape
+    n, p = b.shape[-1], xdt.shape[-1]
+
+    def per_seq(a1, x1, b1, c1):
+        def step(h, t):
+            h = jnp.exp(a1[t]) * h + jnp.outer(b1[t], x1[t])
+            return h, c1[t] @ h
+
+        h0 = jnp.zeros((n, p), jnp.float32)
+        hf, ys = jax.lax.scan(step, h0, jnp.arange(s))
+        return ys, hf
+
+    return jax.vmap(per_seq)(a.astype(jnp.float32), xdt.astype(jnp.float32),
+                             b.astype(jnp.float32), c.astype(jnp.float32))

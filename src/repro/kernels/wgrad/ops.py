@@ -1,0 +1,20 @@
+"""Jit'd wrapper: pad the pair lists to the row tile and dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmap import KernelMap
+from repro.kernels.common import default_interpret
+from repro.kernels.wgrad.wgrad import wgrad_pallas
+
+
+def wgrad(x: jax.Array, dy: jax.Array, kmap: KernelMap, *, tile_r: int = 128,
+          interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    kd, cap = kmap.ws_in.shape
+    pad = (-cap) % tile_r
+    ws_in = jnp.pad(kmap.ws_in, ((0, 0), (0, pad)), constant_values=-1)
+    ws_out = jnp.pad(kmap.ws_out, ((0, 0), (0, pad)), constant_values=-1)
+    return wgrad_pallas(ws_in, ws_out, x, dy, tile_r=tile_r, interpret=interpret)

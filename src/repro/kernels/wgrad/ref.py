@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the sparse-conv weight-gradient kernel.
+
+dW_δ = Σ_{(p,q) ∈ M_δ} x_pᵀ dy_q — per offset, a GEMM whose *both* operands
+go through sparse iterators (paper §6.1: why wgrad prefers different
+dataflow parameters than fwd/dgrad).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wgrad_ref(x: jax.Array, dy: jax.Array, ws_in: jax.Array,
+              ws_out: jax.Array) -> jax.Array:
+    """x: (N_in, Cin); dy: (N_out, Cout); ws_in/ws_out: (KD, cap) int32
+    (-1 padded) → (KD, Cin, Cout) in f32."""
+    def per_offset(i_in, i_out):
+        xs = jnp.where((i_in >= 0)[:, None], x[jnp.clip(i_in, 0)], 0)
+        ys = jnp.where((i_out >= 0)[:, None], dy[jnp.clip(i_out, 0)], 0)
+        return jnp.dot(xs.astype(jnp.float32).T, ys.astype(jnp.float32))
+
+    return jax.vmap(per_offset)(ws_in, ws_out)

@@ -1,0 +1,105 @@
+"""Sparse-conv weight gradient (wgrad) as a Pallas TPU kernel.
+
+The paper's third training kernel (§4.2/§6.1): a GEMM with *two* sparse
+iterators — both operands are gathered through the kernel map, and the K
+loop runs over output points (large), which is why the paper tunes wgrad's
+dataflow separately and prefers offline-reordered maps for it.
+
+Structure mirrors the fwd kernels: pair lists in SMEM, per-row async DMA
+gathers of BOTH operands into VMEM (double scratch), MXU outer-product
+accumulation into a VMEM (Cin, Cout) accumulator across the *sequential*
+row-tile grid dimension, one write-back per offset.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(wsin_ref, wsout_ref, x_ref, dy_ref, o_ref, xs, ys, acc,
+            sems_x, sems_y, *, tile_r: int, cin: int, cout: int):
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _zero():
+        acc[...] = jnp.zeros_like(acc)
+
+    # gather both operands' rows (all DMAs in flight before any wait)
+    for i in range(tile_r):
+        idx = wsin_ref[0, i]
+
+        @pl.when(idx >= 0)
+        def _sx():
+            pltpu.make_async_copy(x_ref.at[idx], xs.at[i], sems_x.at[i]).start()
+
+        @pl.when(idx < 0)
+        def _zx():
+            xs[i, :] = jnp.zeros((cin,), xs.dtype)
+
+        odx = wsout_ref[0, i]
+
+        @pl.when(odx >= 0)
+        def _sy():
+            pltpu.make_async_copy(dy_ref.at[odx], ys.at[i], sems_y.at[i]).start()
+
+        @pl.when(odx < 0)
+        def _zy():
+            ys[i, :] = jnp.zeros((cout,), ys.dtype)
+
+    for i in range(tile_r):
+        idx = wsin_ref[0, i]
+
+        @pl.when(idx >= 0)
+        def _wx():
+            pltpu.make_async_copy(x_ref.at[idx], xs.at[i], sems_x.at[i]).wait()
+
+        odx = wsout_ref[0, i]
+
+        @pl.when(odx >= 0)
+        def _wy():
+            pltpu.make_async_copy(dy_ref.at[odx], ys.at[i], sems_y.at[i]).wait()
+
+    acc[...] += jnp.dot(xs[...].T, ys[...], preferred_element_type=jnp.float32)
+
+    @pl.when(r == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[0] = acc[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+def wgrad_pallas(ws_in: jax.Array, ws_out: jax.Array, x: jax.Array,
+                 dy: jax.Array, *, tile_r: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """ws_in/ws_out: (KD, cap) int32 pair lists; x: (N_in, Cin);
+    dy: (N_out, Cout) → dW (KD, Cin, Cout) f32."""
+    kd, cap = ws_in.shape
+    cin, cout = x.shape[1], dy.shape[1]
+    assert cap % tile_r == 0
+    grid = (kd, cap // tile_r)
+    kernel = functools.partial(_kernel, tile_r=tile_r, cin=cin, cout=cout)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_r), lambda k, r: (k, r), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, tile_r), lambda k, r: (k, r), memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, cin, cout), lambda k, r: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kd, cin, cout), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tile_r, cin), x.dtype),
+            pltpu.VMEM((tile_r, cout), dy.dtype),
+            pltpu.VMEM((cin, cout), jnp.float32),
+            pltpu.SemaphoreType.DMA((tile_r,)),
+            pltpu.SemaphoreType.DMA((tile_r,)),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(ws_in, ws_out, x, dy)

@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+For each cell we AOT-compile the real step function (train / prefill /
+serve) against ShapeDtypeStruct inputs on the production mesh — no host
+memory is allocated for parameters.  The compiled artifact yields:
+
+* memory_analysis()  — per-device bytes (does the cell fit a 16 GB v5e?),
+* cost_analysis()    — per-device HLO FLOPs / bytes for the roofline,
+* as_text()          — the collective schedule, parsed into wire bytes.
+
+Results append to benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json and
+are summarized into EXPERIMENTS.md §Dry-run/§Roofline by
+benchmarks/roofline_report.py.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import base as cfgbase
+from repro.launch import hlo_analysis, mesh as meshlib, steps
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = True) -> dict:
+    cfg = cfgbase.get_arch(arch)
+    shape = cfgbase.SHAPES[shape_name]
+    ok, why = cfgbase.cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+    debug = os.environ.get("REPRO_DRYRUN_MESH")  # e.g. "4,2" or "2,2,2"
+    if debug:
+        dims = tuple(int(x) for x in debug.split(","))
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh = meshlib.make_mesh(dims, axes)
+    else:
+        mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    ctx = meshlib.make_ctx(mesh, fsdp=fsdp)
+    t0 = time.time()
+    jitted, args = steps.lowerable(cfg, shape, mesh, ctx)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    print(ma)                       # proves it fits (or reports it doesn't)
+    ca = compiled.cost_analysis()
+    print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
+    txt = compiled.as_text()
+    coll = hlo_analysis.collective_stats(txt)
+    roof = hlo_analysis.roofline_terms(ca.get("flops", 0.0),
+                                       ca.get("bytes accessed", 0.0),
+                                       coll["collective_bytes"])
+    n_chips = mesh.size
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "n_chips": n_chips, "fsdp": fsdp,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_device": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+            "argument_bytes": ma.argument_size_in_bytes if ma else None,
+            "output_bytes": ma.output_size_in_bytes if ma else None,
+            "temp_bytes": ma.temp_size_in_bytes if ma else None,
+            "alias_bytes": ma.alias_size_in_bytes if ma else None,
+        },
+        "collectives": coll,
+        "roofline": roof,
+        "global_flops": ca.get("flops", 0.0) * n_chips,
+    }
+    return rec
+
+
+_ACCT_KEYS = ("flops", "bytes_accessed", "collective_bytes",
+              "bytes_all-reduce", "bytes_all-gather", "bytes_reduce-scatter",
+              "bytes_all-to-all", "bytes_collective-permute")
+
+
+def _measure_quantities(cfg, shape, mesh, ctx, opt_cfg) -> dict:
+    jitted, args = steps.lowerable(cfg, shape, mesh, ctx, opt_cfg)
+    compiled = jitted.lower(*args).compile()
+    ca = compiled.cost_analysis()
+    coll = hlo_analysis.collective_stats(compiled.as_text())
+    q = {"flops": ca.get("flops", 0.0), "bytes_accessed": ca.get("bytes accessed", 0.0)}
+    for k in _ACCT_KEYS[2:]:
+        q[k] = coll.get(k, 0.0)
+    return q
+
+
+def _perf_variants():
+    """Beyond-paper optimizations measured by the §Perf hillclimb."""
+    import dataclasses as dc
+
+    return {
+        "moe_local_dispatch": lambda c: dc.replace(
+            c, moe=dc.replace(c.moe, dispatch="local_shardmap")),
+        "exact_causal": lambda c: dc.replace(c, attn_exact_causal=True),
+        "ssd_bf16": lambda c: dc.replace(
+            c, ssm=dc.replace(c.ssm, bf16_scores=True)),
+    }
+
+
+def accounting_pass(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = True,
+                    variant: str | None = None) -> dict:
+    """Exact FLOP/byte accounting: fully-unrolled reduced-depth compiles +
+    linear extrapolation in depth (see configs.base.depth_basis)."""
+    import numpy as np
+
+    cfg = cfgbase.get_arch(arch)
+    if variant:
+        cfg = _perf_variants()[variant](cfg)
+    shape = cfgbase.SHAPES[shape_name]
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    ctx = meshlib.make_ctx(mesh, fsdp=fsdp)
+    depths, row, full_row = cfgbase.depth_basis(cfg)
+    from repro.train import optimizer as optlib
+
+    opt_cfg = optlib.AdamWConfig(factored=cfg.params_count() > 2e11)
+    old = os.environ.get("REPRO_SCAN_UNROLL")
+    os.environ["REPRO_SCAN_UNROLL"] = "full"
+    try:
+        samples = []
+        for d in depths:
+            dcfg = cfgbase.accounting_variant(cfg, shape, d)
+            t0 = time.time()
+            samples.append(_measure_quantities(dcfg, shape, mesh, ctx, opt_cfg))
+            print(f"  accounting depth={d}: {time.time() - t0:.1f}s", flush=True)
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_SCAN_UNROLL", None)
+        else:
+            os.environ["REPRO_SCAN_UNROLL"] = old
+    a_mat = np.array([row(d) for d in depths])
+    est = {}
+    for k in _ACCT_KEYS:
+        b = np.array([s.get(k, 0.0) for s in samples])
+        coef, *_ = np.linalg.lstsq(a_mat, b, rcond=None)
+        est[k] = max(float(np.dot(full_row, coef)), 0.0)
+    return est
+
+
+def apply_accounting(rec: dict, est: dict) -> dict:
+    """Merge extrapolated quantities; recompute the roofline terms."""
+    rec["per_device_extrapolated"] = est
+    rec["roofline_raw_scan_counts"] = rec["roofline"]
+    rec["roofline"] = hlo_analysis.roofline_terms(
+        est["flops"], est["bytes_accessed"], est["collective_bytes"])
+    rec["global_flops"] = est["flops"] * rec["n_chips"]
+    return rec
+
+
+def save(rec: dict):
+    sub = RESULTS / ("multi_pod" if rec["multi_pod"] else "single_pod")
+    sub.mkdir(parents=True, exist_ok=True)
+    path = sub / f"{rec['arch']}__{rec['shape']}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    print("saved", path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="run the exact-accounting pass and merge into the "
+                         "existing per-cell JSONs")
+    args = ap.parse_args()
+
+    archs = cfgbase.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(cfgbase.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                sub = RESULTS / ("multi_pod" if mp else "single_pod")
+                path = sub / f"{arch}__{shape}.json"
+                if args.skip_existing and path.exists() and not args.roofline:
+                    print("skip existing", path.name)
+                    continue
+                tag = f"[{arch} × {shape} × {'2x16x16' if mp else '16x16'}]"
+                print(f"=== {tag} ===", flush=True)
+                try:
+                    if args.roofline:
+                        if not path.exists():
+                            print(f"{tag} no base record; run compile pass first")
+                            continue
+                        rec = json.loads(path.read_text())
+                        if rec["status"] != "ok":
+                            print(f"{tag} {rec['status']}; skip accounting")
+                            continue
+                        if "per_device_extrapolated" in rec and args.skip_existing:
+                            continue
+                        est = accounting_pass(arch, shape, mp, fsdp=not args.no_fsdp)
+                        rec = apply_accounting(rec, est)
+                        save(rec)
+                        r = rec["roofline"]
+                        print(f"{tag} ACCOUNTED bottleneck={r['bottleneck']} "
+                              f"frac={r['roofline_fraction']:.3f}", flush=True)
+                        continue
+                    rec = run_cell(arch, shape, mp, fsdp=not args.no_fsdp)
+                    save(rec)
+                    if rec["status"] == "ok":
+                        r = rec["roofline"]
+                        print(f"{tag} OK compile={rec['compile_s']}s "
+                              f"bottleneck={r['bottleneck']} "
+                              f"frac={r['roofline_fraction']:.3f}", flush=True)
+                    else:
+                        print(f"{tag} SKIPPED: {rec['reason']}", flush=True)
+                except Exception as e:  # record, continue sweep
+                    failures.append((tag, repr(e)))
+                    sub.mkdir(parents=True, exist_ok=True)
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "multi_pod": mp,
+                        "status": "error", "error": traceback.format_exc()}, indent=1))
+                    print(f"{tag} FAILED: {e}", flush=True)
+    if failures:
+        print("\nFAILURES:")
+        for tag, e in failures:
+            print(" ", tag, e)
+        raise SystemExit(1)
+    print("\nAll requested cells passed.")
+
+
+if __name__ == "__main__":
+    main()

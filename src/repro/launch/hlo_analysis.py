@@ -1,0 +1,88 @@
+"""Parse collective traffic and roofline terms out of a compiled dry-run.
+
+collective_bytes is not in cost_analysis(); we parse the optimized (SPMD
+partitioned, per-device) HLO text and sum the result-shape bytes of every
+collective op, scaled by the standard ring-algorithm wire factors:
+
+    all-reduce          2·(n-1)/n  ≈ 2   (reduce-scatter + all-gather)
+    all-gather          (n-1)/n    ≈ 1
+    reduce-scatter      (n-1)/n    ≈ 1
+    all-to-all          (n-1)/n    ≈ 1
+    collective-permute  1
+
+The HLO is already the per-device program, so summed bytes are per-device
+wire traffic; dividing by the per-link ICI bandwidth gives the collective
+roofline term directly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_FACTORS = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "collective-broadcast": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# e.g.:  %x = (f32[8,16]{1,0}, f32[8,16]{1,0}) all-reduce(...)  or
+#        %y = bf16[128,7168]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+\[[^\]]*\]\S*)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute|collective-broadcast)"
+    r"(?!-done)\b(?!-done)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    stats: Dict[str, float] = {k: 0.0 for k in _COLL_FACTORS}
+    counts: Dict[str, int] = {k: 0 for k in _COLL_FACTORS}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        b = _shape_bytes(shape_str)
+        stats[op] += b * _COLL_FACTORS[op]
+        counts[op] += 1
+    out = {f"bytes_{k}": v for k, v in stats.items() if counts[k]}
+    out.update({f"count_{k}": counts[k] for k in counts if counts[k]})
+    out["collective_bytes"] = sum(stats.values())
+    return out
+
+
+def roofline_terms(per_dev_flops: float, per_dev_bytes: float,
+                   per_dev_coll_bytes: float, *, peak_flops: float = 197e12,
+                   hbm_bw: float = 819e9, link_bw: float = 50e9) -> Dict[str, float]:
+    t_c = per_dev_flops / peak_flops
+    t_m = per_dev_bytes / hbm_bw
+    t_x = per_dev_coll_bytes / link_bw
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "bottleneck": dom[0],
+        "bound_s": dom[1],
+        # fraction of roofline actually achievable if perfectly overlapped:
+        "roofline_fraction": t_c / max(dom[1], 1e-30),
+    }

@@ -1,0 +1,36 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.lm_common import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic restore)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_ctx(mesh, fsdp: bool = False) -> ShardCtx:
+    axes = mesh.axis_names
+    batch = tuple(a for a in axes if a in ("pod", "data"))
+    return ShardCtx(mesh=mesh, batch=batch, model="model",
+                    model_size=mesh.shape["model"], fsdp=fsdp)
+
+
+# TPU v5e hardware constants for the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link

@@ -1,0 +1,171 @@
+"""Step builders shared by dryrun / train / serve launchers.
+
+Everything here returns (step_fn, example_args_as_ShapeDtypeStructs,
+in_shardings, donate_argnums) so the launcher can ``jit(...).lower(...)``
+without allocating a single parameter.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfgbase
+from repro.models import api
+from repro.models.lm_common import ArchConfig, ShardCtx
+from repro.train import optimizer as opt
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspecs(cfg: ArchConfig, shape: cfgbase.ShapeCfg, ctx: ShardCtx):
+    b = ctx.b
+    specs = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.embed_input:
+            specs["tokens"] = P(b, None)
+        else:
+            specs["embeds"] = P(b, None, None)
+        if shape.kind == "train":
+            specs["labels"] = P(b, None)
+        if cfg.cross_every:
+            specs["img_emb"] = P(b, None, None)
+        return specs
+    raise ValueError(shape.kind)
+
+
+def cache_pspecs(cfg: ArchConfig, cache_sds, ctx: ShardCtx):
+    """Partition the KV/SSM caches: batch over data axes when divisible,
+    else sequence (context parallelism for the B=1 long_500k cell); heads /
+    d_inner over the model axis."""
+    from repro.models.lm_common import _axes_size
+
+    dp = _axes_size(ctx)
+
+    def spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shp = leaf.shape
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "img_k", "img_v"):
+            # (L, B, T, Hkv, hd)
+            bspec = ctx.b if shp[1] % dp == 0 else None
+            tspec = None if bspec is not None else ("data" if shp[2] % ctx.mesh.shape["data"] == 0 else None)
+            return P(None, bspec, tspec, ctx.heads(shp[3]), None)
+        if name == "conv":
+            # (L, B, K-1, d_in)
+            bspec = ctx.b if shp[1] % dp == 0 else None
+            return P(None, bspec, None, ctx.heads(shp[3]))
+        if name == "ssm":
+            # mamba1 (L,B,d_in,N) / mamba2 (L,B,H,N,P)
+            bspec = ctx.b if shp[1] % dp == 0 else None
+            return P(None, bspec, ctx.heads(shp[2]), *([None] * (len(shp) - 3)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache_sds)
+
+
+def make_train_step(cfg: ArchConfig, ctx: ShardCtx, opt_cfg: Optional[opt.AdamWConfig] = None):
+    opt_cfg = opt_cfg or opt.AdamWConfig(factored=cfg.params_count() > 2e11)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(partial(api.loss_fn, cfg, ctx=ctx))(params, batch)
+        new_params, new_state, gnorm = opt.adamw_update(params, grads, opt_state, opt_cfg)
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt_cfg
+
+
+def lowerable_train(cfg: ArchConfig, shape: cfgbase.ShapeCfg, mesh, ctx: ShardCtx,
+                    opt_cfg: Optional[opt.AdamWConfig] = None):
+    params_sds = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = api.param_pspecs(cfg, params_sds, ctx)
+    train_step, opt_cfg = make_train_step(cfg, ctx, opt_cfg)
+    opt_sds = jax.eval_shape(lambda: opt.init_opt_state(params_sds, opt_cfg))
+    opt_specs = _opt_pspecs(pspecs, opt_sds)
+    batch_sds = cfgbase.input_specs(cfg, shape)
+    bspecs = batch_pspecs(cfg, shape, ctx)
+    jitted = jax.jit(train_step,
+                     in_shardings=(_named(mesh, pspecs), _named(mesh, opt_specs),
+                                   _named(mesh, bspecs)),
+                     out_shardings=(_named(mesh, pspecs), _named(mesh, opt_specs), None),
+                     donate_argnums=(0, 1))
+    return jitted, (params_sds, opt_sds, batch_sds)
+
+
+def _opt_pspecs(param_pspecs, opt_sds):
+    """Adam state specs mirror the params; factored leaves drop reduced dims."""
+    def per_leaf(spec, state_leaf):
+        def pad(s, rank):
+            e = list(s) + [None] * (rank - len(s))
+            return e
+
+        m_rank = state_leaf["m"].ndim
+        e = pad(spec, m_rank)
+        out = {"m": P(*e)}
+        if "v" in state_leaf:
+            out["v"] = P(*e)
+        else:
+            out["vr"] = P(*e[:-1])
+            out["vc"] = P(*(e[:-2] + [e[-1]]))
+        return out
+
+    return {"mu": jax.tree.map(per_leaf, param_pspecs, opt_sds["mu"],
+                               is_leaf=lambda x: isinstance(x, P)),
+            "step": P()}
+
+
+def lowerable_prefill(cfg: ArchConfig, shape: cfgbase.ShapeCfg, mesh, ctx: ShardCtx):
+    params_sds = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = api.param_pspecs(cfg, params_sds, ctx)
+    batch_sds = cfgbase.input_specs(cfg, shape)
+    bspecs = batch_pspecs(cfg, shape, ctx)
+
+    def prefill_step(params, batch):
+        cache = api.init_cache(cfg, shape.batch, shape.seq)
+        inp = batch.get("tokens", batch.get("embeds"))
+        return api.prefill(cfg, params, inp, cache, ctx,
+                           img_emb=batch.get("img_emb"))
+
+    jitted = jax.jit(prefill_step,
+                     in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)))
+    return jitted, (params_sds, batch_sds)
+
+
+def lowerable_decode(cfg: ArchConfig, shape: cfgbase.ShapeCfg, mesh, ctx: ShardCtx):
+    params_sds = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = api.param_pspecs(cfg, params_sds, ctx)
+    specs = cfgbase.input_specs(cfg, shape)
+    cache_sds, token_sds = specs["cache"], specs["token"]
+    cspecs = cache_pspecs(cfg, cache_sds, ctx)
+    from repro.models.lm_common import _axes_size
+
+    tok_spec = P(ctx.b) if token_sds.shape[0] % _axes_size(ctx) == 0 else P(None)
+    if token_sds.ndim == 2:
+        tok_spec = P(*tok_spec, None)
+
+    def serve_step(params, cache, token):
+        return api.decode_step(cfg, params, cache, token, ctx)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(_named(mesh, pspecs), _named(mesh, cspecs),
+                                   NamedSharding(mesh, tok_spec)),
+                     out_shardings=(None, _named(mesh, cspecs)),
+                     donate_argnums=(1,))
+    return jitted, (params_sds, cache_sds, token_sds)
+
+
+def lowerable(cfg, shape, mesh, ctx, opt_cfg=None):
+    if shape.kind == "train":
+        jitted, args = lowerable_train(cfg, shape, mesh, ctx, opt_cfg)
+    elif shape.kind == "prefill":
+        jitted, args = lowerable_prefill(cfg, shape, mesh, ctx)
+    else:
+        jitted, args = lowerable_decode(cfg, shape, mesh, ctx)
+    return jitted, args

@@ -1,0 +1,44 @@
+"""Unified model API: family → (init, loss, prefill, decode, cache, specs)."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba, mamba2, transformer
+from repro.models.lm_common import ArchConfig, NO_SHARD, ShardCtx, make_pspecs
+
+_FAMILY_MOD = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "audio": transformer, "ssm": mamba, "hybrid": mamba2,
+}
+
+
+def model_module(cfg: ArchConfig):
+    return _FAMILY_MOD[cfg.family]
+
+
+def init_params(cfg: ArchConfig, key):
+    return model_module(cfg).init_params(cfg, key)
+
+
+def param_pspecs(cfg: ArchConfig, params, ctx: ShardCtx):
+    expert_sharded = cfg.moe.shard_experts if cfg.moe else True
+    return make_pspecs(params, ctx, expert_sharded=expert_sharded)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, ctx: ShardCtx = NO_SHARD):
+    return model_module(cfg).loss_fn(cfg, params, batch, ctx)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return model_module(cfg).init_cache(cfg, batch, max_len)
+
+
+def decode_step(cfg: ArchConfig, params, cache, token, ctx: ShardCtx = NO_SHARD):
+    return model_module(cfg).decode_step(cfg, params, cache, token, ctx)
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache, ctx: ShardCtx = NO_SHARD, **kw):
+    return model_module(cfg).prefill(cfg, params, tokens, cache, ctx, **kw)

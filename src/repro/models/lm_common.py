@@ -1,0 +1,552 @@
+"""Shared LM building blocks: configs, norms, RoPE, chunked attention,
+MLPs, embeddings, chunked loss, and sharding-constraint helpers.
+
+All modules are pure functions over explicit param pytrees (no flax).  Layer
+stacks are `lax.scan`s over stacked params so the HLO (and compile time) is
+O(1) in depth — essential for the 100-layer dry-run cells on one CPU core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def xscan(body, init, xs, length=None):
+    """lax.scan wrapper honoring REPRO_SCAN_UNROLL.
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, which silently under-reports FLOPs/bytes of layer-scanned models
+    by ~L×.  The dry-run's roofline accounting pass sets
+    REPRO_SCAN_UNROLL=full on reduced-depth configs so every scan unrolls and
+    the counts are exact (launch/dryrun.py --roofline)."""
+    mode = os.environ.get("REPRO_SCAN_UNROLL", "")
+    kw = {}
+    if mode == "full":
+        kw["unroll"] = True
+    elif mode:
+        kw["unroll"] = int(mode)
+    return jax.lax.scan(body, init, xs, length=length, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Sharding helper: constraints are no-ops without a mesh (CPU unit tests).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Axis names of the active mesh; None mesh disables all constraints."""
+
+    mesh: Optional[object] = None          # jax.sharding.Mesh
+    batch: Tuple[str, ...] = ("data",)     # ('pod','data') when multi-pod
+    model: Optional[str] = "model"
+    model_size: int = 1                    # devices along the model axis
+    fsdp: bool = False                     # additionally shard params on batch axes
+
+    def cons(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, P(*spec)))
+
+    @property
+    def b(self):   # batch partition entry
+        return self.batch if len(self.batch) > 1 else self.batch[0]
+
+    @property
+    def m(self):
+        return self.model
+
+    def heads(self, n: int):
+        """Model-axis entry for a head-count dim (only if evenly divisible)."""
+        return self.model if (self.model and n % max(self.model_size, 1) == 0) else None
+
+
+NO_SHARD = ShardCtx(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    shard_experts: bool = True   # EP over model axis (False ⇒ TP inside expert)
+    # token→expert dispatch dataflow (the Sparse Autotuner choice at scale):
+    #   gspmd_sort      — global sort-based gather-GEMM-scatter (paper-faithful)
+    #   local_shardmap  — shard_map-local masked dispatch (beyond-paper, §Perf)
+    dispatch: str = "gspmd_sort"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 16
+    expand: int = 2
+    conv_kernel: int = 4
+    dt_rank: int = 0          # 0 ⇒ d_model // 16 (mamba1 only)
+    head_dim: int = 64        # mamba2 only
+    version: int = 1          # 1 = mamba1 (falcon-mamba), 2 = mamba2/SSD
+    chunk: int = 128
+    # §Perf beyond-paper switch: keep the O(Q²) intra-chunk SSD tensors in
+    # bf16 (cumsums/state flow stay f32) — halves the dominant HBM traffic.
+    bf16_scores: bool = False
+    # Use the fused Pallas SSD kernel (kernels/ssd_chunk) instead of the XLA
+    # chunked path — the TPU deployment hot-swap (interpret-mode on CPU).
+    use_pallas_kernel: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 ⇒ d_model // n_heads
+    norm: str = "rms"               # rms | ln | nonparam
+    mlp: str = "swiglu"             # swiglu | gelu
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0         # 0 = full attention
+    tie_embeddings: bool = False
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    # hybrid (zamba2): shared attention block every `attn_every` ssm blocks
+    attn_every: int = 0
+    # vlm (llama-3.2-vision): one cross-attn layer after every `cross_every`
+    # self-attn layers; n_img_tokens precomputed patch embeddings per sample
+    cross_every: int = 0
+    n_img_tokens: int = 0
+    # audio (musicgen): frontend stub feeds embeddings directly
+    embed_input: bool = True        # False ⇒ input_specs provide (B, S, d) embeddings
+    sub_quadratic: bool = False     # long_500k eligibility
+    dtype: str = "bfloat16"
+    attn_chunk: int = 1024          # kv chunk for blockwise attention
+    loss_chunk: int = 512           # seq chunk for big-vocab loss
+    # §Perf beyond-paper switches (False = paper-faithful baseline):
+    # exact-causal chunking drops fully-masked KV blocks (≈2× attention
+    # FLOPs/bytes at long S) and runs the P·V matmul in the activation dtype.
+    attn_exact_causal: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def params_count(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS = 6·N·D in the roofline)."""
+        d, v, L = self.d_model, self.vocab, self.n_layers
+        n = v * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("ssm",):
+            d_in = self.ssm.expand * d
+            per = (d * 2 * d_in                  # in_proj (x, z)
+                   + d_in * self.ssm.conv_kernel
+                   + d_in * ((self.ssm.dt_rank or d // 16) + 2 * self.ssm.d_state)
+                   + (self.ssm.dt_rank or d // 16) * d_in
+                   + d_in * self.ssm.d_state + d_in   # A_log, D
+                   + d_in * d)                   # out_proj
+            return n + L * per
+        att = d * (self.n_heads * self.hd) + 2 * d * (self.kv_heads * self.hd) \
+            + (self.n_heads * self.hd) * d
+        if self.moe is not None:
+            ff = self.moe.n_experts * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+            ff_active = self.moe.top_k * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        elif self.mlp == "swiglu":
+            ff = ff_active = 3 * d * self.d_ff
+        else:
+            ff = ff_active = 2 * d * self.d_ff
+        if self.family == "hybrid":
+            # zamba2: L mamba2 blocks + one shared attention block
+            d_in = self.ssm.expand * d
+            nh = d_in // self.ssm.head_dim
+            per = (d * 2 * d_in + d_in * self.ssm.conv_kernel
+                   + d_in * 2 * self.ssm.d_state + nh * 2 + d_in * d)
+            return n + L * per + (att + ff)
+        total = n + L * (att + ff)
+        if self.cross_every:
+            n_cross = self.n_layers // (self.cross_every + 1)
+            n_self = self.n_layers - n_cross
+            total = n + n_self * (att + ff) + n_cross * (att + ff)
+        return total
+
+    def active_params_count(self) -> int:
+        if self.moe is None:
+            return self.params_count()
+        d, L = self.d_model, self.n_layers
+        att = d * (self.n_heads * self.hd) + 2 * d * (self.kv_heads * self.hd) \
+            + (self.n_heads * self.hd) * d
+        ff_active = self.moe.top_k * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        return self.vocab * d * 2 + L * (att + ff_active)
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale=None, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(x, scale=None, bias=None, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(cfg: ArchConfig, x, p):
+    if cfg.norm == "rms":
+        return rms_norm(x, p["scale"])
+    if cfg.norm == "ln":
+        return layer_norm(x, p["scale"], p["bias"])
+    return layer_norm(x, None, None)     # olmo non-parametric LN
+
+
+def init_norm(cfg: ArchConfig, d: int, dtype):
+    if cfg.norm == "rms":
+        return {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {}
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (XLA path; Pallas flash kernel is the TPU hot swap)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal=True, window: int = 0,
+                      chunk_q: int = 1024, chunk_k: int = 1024,
+                      q_offset=0, exact_causal: bool = False) -> jax.Array:
+    """Online-softmax blockwise attention.
+
+    q: (B, S, H, hd); k/v: (B, T, Hkv, hd).  GQA via head folding.
+    q_offset: absolute position of q[0] relative to k[0] (prefill: T - S).
+    window > 0: sliding-window; only the needed kv slab is gathered per q
+    chunk, so compute is O(S·window) not O(S·T).
+    """
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    chunk_q = min(chunk_q, s)
+    assert s % chunk_q == 0
+    scale = hd ** -0.5
+    qg = q.reshape(b, s, hkv, g, hd)
+
+    if window:
+        # pad kv on the left so every q chunk sees a fixed-size slab
+        slab = ((window + chunk_q - 1) // chunk_k + 1) * chunk_k
+        kp = jnp.pad(k, ((0, 0), (slab, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (slab, 0), (0, 0), (0, 0)))
+
+        def one_chunk(i):
+            q_blk = jax.lax.dynamic_slice_in_dim(qg, i * chunk_q, chunk_q, 1)
+            q_pos = q_offset + i * chunk_q + jnp.arange(chunk_q)
+            start = i * chunk_q + q_offset + chunk_q - slab + slab  # in padded coords
+            k_blk = jax.lax.dynamic_slice_in_dim(kp, start, slab, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(vp, start, slab, 1)
+            k_pos = i * chunk_q + q_offset + chunk_q - slab + jnp.arange(slab)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
+                                k_blk.astype(jnp.float32)) * scale
+            mask = (k_pos[None, :] <= q_pos[:, None]) & \
+                   (k_pos[None, :] > q_pos[:, None] - window) & (k_pos[None, :] >= 0)
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            p = jax.nn.softmax(logits, axis=-1)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_blk.astype(jnp.float32))
+            return o.astype(q.dtype)
+
+        outs = [one_chunk(i) for i in range(s // chunk_q)]
+        return jnp.concatenate(outs, axis=1).reshape(b, s, h, hd)
+
+    if exact_causal and causal and q_offset == 0 and s == t:
+        # §Perf: python-unrolled q chunks with *static* kv prefixes — no
+        # compute or traffic on fully-masked blocks, and the P·V matmul runs
+        # in the activation dtype (softmax stats stay f32).
+        nq = s // chunk_q
+        outs = []
+        for i in range(nq):
+            hi = (i + 1) * chunk_q
+            q_blk = qg[:, i * chunk_q:hi].astype(jnp.float32)
+            k_blk = k[:, :hi].astype(jnp.float32)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            rows = i * chunk_q + jnp.arange(chunk_q)
+            cols = jnp.arange(hi)
+            logits = jnp.where((cols[None, :] <= rows[:, None])[None, None, None],
+                               logits, NEG_INF)
+            p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+            outs.append(jnp.einsum("bhgqk,bkhd->bqhgd", p, v[:, :hi]).astype(q.dtype))
+        return jnp.concatenate(outs, axis=1).reshape(b, s, h, hd)
+
+    chunk_k = min(chunk_k, t)
+    assert t % chunk_k == 0
+    nq, nk = s // chunk_q, t // chunk_k
+
+    def q_body(_, iq):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, iq * chunk_q, chunk_q, 1).astype(jnp.float32)
+        q_pos = q_offset + iq * chunk_q + jnp.arange(chunk_q)
+
+        def kv_body(carry, ik):
+            m_prev, l_prev, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ik * chunk_k, chunk_k, 1).astype(jnp.float32)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ik * chunk_k, chunk_k, 1).astype(jnp.float32)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            if causal:
+                k_pos = ik * chunk_k + jnp.arange(chunk_k)
+                mask = k_pos[None, :] <= q_pos[:, None]
+                logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+            alpha = jnp.exp(m_prev - m_new)
+            pl_ = jnp.exp(logits - m_new[..., None])
+            l_new = l_prev * alpha + pl_.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", pl_, v_blk)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, chunk_q, hd), jnp.float32)
+        (m, l, acc), _ = xscan(kv_body, (m0, l0, a0), jnp.arange(nk))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, o.astype(q.dtype)
+
+    _, outs = xscan(q_body, None, jnp.arange(nq))
+    # outs: (nq, b, hkv, g, chunk_q, hd) → (b, s, h, hd)
+    outs = jnp.moveaxis(outs, 0, 3)                    # b,hkv,g,nq,cq,hd
+    return outs.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4).reshape(b, s, h, hd)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token attention over a cache.
+
+    q: (B, H, hd); caches: (B, T, Hkv, hd); cache_len: () int32 — number of
+    valid cache entries *including* the token just written."""
+    b, h, hd = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache.astype(jnp.float32)) * hd ** -0.5
+    pos = jnp.arange(t)
+    mask = pos[None] < cache_len
+    if window:
+        mask = mask & (pos[None] >= cache_len - window)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(k_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_apply(cfg: ArchConfig, p, x, ctx: ShardCtx):
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = ctx.cons(h, *( [ctx.b] + [None]*(x.ndim-2) + [ctx.m] ))
+        return h @ p["w_down"]
+    h = x @ p["w_up"]
+    if "b_up" in p:
+        h = h + p["b_up"]
+    h = jax.nn.gelu(h)
+    h = ctx.cons(h, *( [ctx.b] + [None]*(x.ndim-2) + [ctx.m] ))
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y
+
+
+def mlp_init(cfg: ArchConfig, key, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {"w_gate": _rand(k1, (d, f), dtype),
+                "w_up": _rand(k2, (d, f), dtype),
+                "w_down": _rand(k3, (f, d), dtype)}
+    p = {"w_up": _rand(k1, (d, f), dtype), "w_down": _rand(k2, (f, d), dtype)}
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((f,), dtype)
+        p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _rand(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + blockwise attention)
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg: ArchConfig, key, dtype, d_model: int = 0):
+    d = d_model or cfg.d_model
+    h, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"wq": _rand(k1, (d, h * hd), dtype),
+         "wk": _rand(k2, (d, hkv * hd), dtype),
+         "wv": _rand(k3, (d, hkv * hd), dtype),
+         "wo": _rand(k4, (h * hd, d), dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def attn_qkv(cfg: ArchConfig, p, x, positions, ctx: ShardCtx, use_rope=True):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = ctx.cons(q, ctx.b, None, ctx.heads(h), None)
+    k = ctx.cons(k, ctx.b, None, ctx.heads(hkv), None)
+    v = ctx.cons(v, ctx.b, None, ctx.heads(hkv), None)
+    return q, k, v
+
+
+def attn_apply(cfg: ArchConfig, p, x, positions, ctx: ShardCtx,
+               chunk: int = 0) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = attn_qkv(cfg, p, x, positions, ctx)
+    chunk = chunk or cfg.attn_chunk
+    o = chunked_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                          chunk_q=min(chunk, s), chunk_k=min(chunk, s),
+                          exact_causal=cfg.attn_exact_causal)
+    o = o.reshape(b, s, -1)
+    return o @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked loss
+# ---------------------------------------------------------------------------
+
+def embed_init(cfg: ArchConfig, key, dtype):
+    p = {"embed": _rand(key, (cfg.vocab, cfg.d_model), dtype, scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _rand(jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab), dtype)
+    return p
+
+
+def unembed_matrix(cfg: ArchConfig, p):
+    return p["embed"].T if cfg.tie_embeddings else p["unembed"]
+
+
+_PSPEC_RULES = {
+    # name: trailing-dim roles; 'm' = model axis, 'f' = fsdp (batch axes), '.' = replicated
+    "embed": "mf", "unembed": "fm",
+    "wq": "fm", "wk": "fm", "wv": "fm", "wo": "mf",
+    "w_gate": "fm", "w_up": "fm", "w_down": "mf",
+    "router": "f.",
+    "in_proj": "fm", "out_proj": "mf", "x_proj": "m.", "dt_w": ".m",
+    "conv_w": "m.", "conv_b": "m", "A_log": "m.", "A_log2": "m", "D": "m",
+    "dt_b": "m", "dt_b2": "m",
+}
+_EXPERT_RULES = {  # (E, d, f) tensors under a 'moe' subtree
+    True: {"w_gate": "mf.", "w_up": "mf.", "w_down": "m.f"},   # EP on experts
+    False: {"w_gate": ".fm", "w_up": ".fm", "w_down": ".mf"},  # TP inside expert
+}
+
+
+def make_pspecs(params, ctx: ShardCtx, expert_sharded: bool = True):
+    """Partition specs for a param tree by leaf-name rules.  Leading stack
+    dims (layers/groups) are replicated; model-axis entries are dropped when
+    the dim is not divisible by the mesh's model-axis size."""
+    def spec_for(path, leaf):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = keys[-1]
+        roles = _PSPEC_RULES.get(name)
+        if any(k == "moe" for k in keys) and name in _EXPERT_RULES[True]:
+            roles = _EXPERT_RULES[expert_sharded][name]
+        if roles is None:
+            return P()
+        shape = leaf.shape
+        trailing = len(roles)
+        entries = [None] * (len(shape) - trailing)
+        for i, r in enumerate(roles):
+            dim = shape[len(shape) - trailing + i]
+            if r == "m" and ctx.model and dim % max(ctx.model_size, 1) == 0:
+                entries.append(ctx.model)
+            elif r == "f" and ctx.fsdp and dim % _axes_size(ctx) == 0:
+                entries.append(ctx.b)
+            else:
+                entries.append(None)
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def _axes_size(ctx: ShardCtx) -> int:
+    if ctx.mesh is None:
+        return 1
+    n = 1
+    for a in ctx.batch:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def chunked_xent(cfg: ArchConfig, p, h, labels, ctx: ShardCtx) -> jax.Array:
+    """Cross-entropy with the (B, chunk, V) logits materialized one sequence
+    chunk at a time (vocab 164k × 1M tokens never exists at once)."""
+    b, s, d = h.shape
+    w = unembed_matrix(cfg, p)
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0
+
+    def body(acc, i):
+        hc = jax.lax.dynamic_slice_in_dim(h, i * c, c, 1)
+        yc = jax.lax.dynamic_slice_in_dim(labels, i * c, c, 1)
+        logits = (hc @ w).astype(jnp.float32)
+        logits = ctx.cons(logits, ctx.b, None, ctx.m)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    tot, _ = xscan(body, jnp.zeros((), jnp.float32), jnp.arange(s // c))
+    return tot / (b * s)

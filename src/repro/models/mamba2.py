@@ -1,0 +1,428 @@
+"""Mamba-2 (SSD) blocks and the Zamba2-7B hybrid model.
+
+SSD chunked algorithm (Dao & Gu 2024): within a chunk the recurrence is the
+attention-like quadratic form  Y = (L ⊙ C Bᵀ) X, across chunks only the
+(B, H, N, P) boundary states flow through a `lax.scan`.  The (Q × Q)
+intra-chunk scores are the only quadratic object and exist one chunk at a
+time — on TPU this is an MXU-friendly batch of small matmuls.
+
+Zamba2: 81 Mamba-2 blocks with a single *shared* attention+MLP block invoked
+after every 6th Mamba block (13 invocations for 78 layers, then 3 trailing
+Mamba blocks).  The shared block's weights are reused at every invocation —
+a parameter-efficiency trick from the paper [arXiv:2411.15242]; each
+invocation keeps its own KV cache at decode time.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm_common import (ArchConfig, NO_SHARD, ShardCtx, _rand, xscan,
+                                    apply_norm, attn_init, attn_qkv,
+                                    chunked_attention, chunked_xent,
+                                    decode_attention, embed_init, init_norm,
+                                    mlp_apply, mlp_init, rms_norm,
+                                    unembed_matrix)
+
+
+def mamba2_init(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": init_norm(cfg, d, dtype),
+        "in_proj": _rand(ks[0], (d, 2 * d_in), dtype),
+        "bc_proj": _rand(ks[1], (d, 2 * s.d_state), dtype),
+        "dt_proj": _rand(ks[2], (d, nh), dtype),
+        "dt_b2": jnp.full((nh,), -4.6, dtype),
+        "conv_w": _rand(ks[3], (d_in, s.conv_kernel), dtype, scale=s.conv_kernel ** -0.5),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "A_log2": jnp.zeros((nh,), dtype),
+        "D": jnp.ones((nh,), dtype),
+        "gate_norm": jnp.ones((d_in,), dtype),
+        "out_proj": _rand(ks[4], (d_in, d), dtype),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, j:j + x.shape[1]] * w[:, j] for j in range(k))
+    return y + b
+
+
+def _ssd_chunked(xh, dt, a_log, b_ssm, c_ssm, chunk: int, h0=None,
+                 bf16_scores: bool = False):
+    """SSD scan.  xh: (B,S,H,P); dt: (B,S,H); b/c: (B,S,N).
+
+    Returns (y (B,S,H,P), h_final (B,H,N,P)).
+
+    bf16_scores (§Perf): the O(Q²) intra-chunk tensors (decay kernel, CBᵀ,
+    masked scores) are the dominant HBM traffic of the whole block; keeping
+    them bf16 halves it.  Cumulative log-decays, softplus outputs and the
+    carried state stay f32 — the same split a Pallas SSD kernel would use
+    (f32 VREG accumulators, bf16 MXU operands)."""
+    b, s_len, h, p_dim = xh.shape
+    n = b_ssm.shape[-1]
+    pad = (-s_len) % chunk
+    if pad:
+        # identity steps: dt=0 ⇒ decay 1 and zero input
+        y, hf = _ssd_chunked(jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                             jnp.pad(dt, ((0, 0), (0, pad), (0, 0))), a_log,
+                             jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0))),
+                             jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0))), chunk, h0,
+                             bf16_scores)
+        return y[:, :s_len], hf
+    nc = s_len // chunk
+    sdt = jnp.bfloat16 if bf16_scores else jnp.float32
+    a = (-jnp.exp(a_log.astype(jnp.float32)) * dt)            # (B,S,H) log-decay
+    xdt = xh.astype(sdt) * dt[..., None].astype(sdt)
+
+    ac = a.reshape(b, nc, chunk, h)
+    xc = xdt.reshape(b, nc, chunk, h, p_dim)
+    bc = b_ssm.astype(sdt).reshape(b, nc, chunk, n)
+    cc = c_ssm.astype(sdt).reshape(b, nc, chunk, n)
+
+    def chunk_body(hprev, xs):
+        a_c, x_c, b_c, c_c = xs                                # (B,Q,H), (B,Q,H,P), (B,Q,N)
+        cum = jnp.cumsum(a_c.astype(jnp.float32), axis=1)      # (B,Q,H) f32
+        # intra-chunk attention-like term: the O(Q²) tensors are built
+        # directly in sdt so no f32 copy ever materializes
+        cum_s = cum.astype(sdt)
+        l_ts = cum_s[:, :, None, :] - cum_s[:, None, :, :]     # (B,Qt,Qs,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(l_ts), jnp.zeros((), sdt))
+        cb = jnp.einsum("btn,bsn->bts", c_c, b_c,
+                        preferred_element_type=sdt)            # (B,Qt,Qs)
+        att = cb[..., None] * decay                            # (B,Qt,Qs,H)
+        y = jnp.einsum("btsh,bshp->bthp", att, x_c,
+                       preferred_element_type=jnp.float32)
+        # inter-chunk contribution from carried state
+        y = y + jnp.einsum("btn,bth,bhnp->bthp", c_c, jnp.exp(cum), hprev)
+        # next boundary state
+        seg = jnp.exp(cum[:, -1:, :] - cum)                    # decay from s to end
+        hnew = jnp.einsum("bsn,bsh,bshp->bhnp", b_c, seg, x_c)
+        hnew = hnew + jnp.exp(cum[:, -1])[:, :, None, None] * hprev
+        return hnew, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p_dim), jnp.float32)
+    hf, ys = xscan(jax.checkpoint(chunk_body), h0,
+                          (ac.transpose(1, 0, 2, 3), xc.transpose(1, 0, 2, 3, 4),
+                           bc.transpose(1, 0, 2, 3), cc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s_len, h, p_dim)
+    return y, hf
+
+
+def mamba2_block(cfg: ArchConfig, p, x, ctx: ShardCtx = NO_SHARD):
+    s_cfg = cfg.ssm
+    b, s_len, d = x.shape
+    d_in = s_cfg.expand * d
+    nh = d_in // s_cfg.head_dim
+
+    h = apply_norm(cfg, x, p["norm"])
+    xz = h @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = ctx.cons(x_in, ctx.b, None, ctx.m)
+    x_c = jax.nn.silu(_causal_conv1d(x_in, p["conv_w"], p["conv_b"]))
+    bc = h @ p["bc_proj"]
+    b_ssm, c_ssm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(h @ p["dt_proj"] + p["dt_b2"]).astype(jnp.float32)  # (B,S,H)
+
+    xh = x_c.reshape(b, s_len, nh, s_cfg.head_dim)
+    if s_cfg.use_pallas_kernel:
+        from repro.kernels.ssd_chunk.ops import ssd_scan
+
+        y, _ = ssd_scan(xh, dt, p["A_log2"], b_ssm, c_ssm, chunk=s_cfg.chunk)
+    else:
+        y, _ = _ssd_chunked(xh, dt, p["A_log2"], b_ssm, c_ssm, min(s_cfg.chunk, s_len),
+                            bf16_scores=s_cfg.bf16_scores)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s_len, d_in)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["out_proj"]
+    return x + ctx.cons(out, ctx.b, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+def _shared_block_init(cfg: ArchConfig, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_norm(cfg, cfg.d_model, dtype),
+            "attn": attn_init(cfg, k1, dtype),
+            "norm2": init_norm(cfg, cfg.d_model, dtype),
+            "mlp": mlp_init(cfg, k2, dtype)}
+
+
+def _shared_block(cfg: ArchConfig, p, x, ctx: ShardCtx):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    h = apply_norm(cfg, x, p["norm1"])
+    q, k, v = attn_qkv(cfg, p["attn"], h, positions, ctx)
+    o = chunked_attention(q, k, v, causal=True, chunk_q=min(cfg.attn_chunk, s),
+                          chunk_k=min(cfg.attn_chunk, s))
+    x = x + o.reshape(b, s, -1) @ p["attn"]["wo"]
+    h2 = apply_norm(cfg, x, p["norm2"])
+    return ctx.cons(x + mlp_apply(cfg, p["mlp"], h2, ctx), ctx.b, None, None)
+
+
+def _split_layers(cfg: ArchConfig):
+    """81 layers → 13 groups of `attn_every` + trailing remainder."""
+    g = cfg.n_layers // cfg.attn_every
+    trailing = cfg.n_layers - g * cfg.attn_every
+    return g, trailing
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = cfg.jdtype
+    ke, kl, ka = jax.random.split(key, 3)
+    params = dict(embed_init(cfg, ke, dtype))
+    params["final_norm"] = init_norm(cfg, cfg.d_model, dtype)
+    keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: mamba2_init(cfg, k, dtype))(keys)
+    if cfg.attn_every:
+        g, trailing = _split_layers(cfg)
+        grouped = jax.tree.map(lambda a: a[: g * cfg.attn_every].reshape(
+            (g, cfg.attn_every) + a.shape[1:]), layers)
+        tail = jax.tree.map(lambda a: a[g * cfg.attn_every:], layers)
+        params["groups"] = grouped
+        params["tail"] = tail
+        params["shared"] = _shared_block_init(cfg, ka, dtype)
+    else:
+        params["layers"] = layers
+    return params
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens, ctx: ShardCtx = NO_SHARD):
+    x = params["embed"][tokens]
+    x = ctx.cons(x, ctx.b, None, None)
+    block = jax.checkpoint(partial(mamba2_block, cfg, ctx=ctx))
+
+    if cfg.attn_every:
+        shared = params["shared"]
+
+        def group_body(x, gp):
+            def inner(x, lp):
+                return block(lp, x), None
+
+            x, _ = xscan(inner, x, gp)
+            x = jax.checkpoint(partial(_shared_block, cfg, ctx=ctx))(shared, x)
+            return x, None
+
+        x, _ = xscan(group_body, x, params["groups"])
+
+        def tail_body(x, lp):
+            return block(lp, x), None
+
+        x, _ = xscan(tail_body, x, params["tail"])
+    else:
+        def body(x, lp):
+            return block(lp, x), None
+
+        x, _ = xscan(body, x, params["layers"])
+    return apply_norm(cfg, x, params["final_norm"])
+
+
+def loss_fn(cfg: ArchConfig, params, batch, ctx: ShardCtx = NO_SHARD):
+    h = forward_hidden(cfg, params, batch["tokens"], ctx)
+    return chunked_xent(cfg, params, h, batch["labels"], ctx)
+
+
+# ---------------------------------------------------------------------------
+# Serving (long_500k runs here: O(1) SSM state + 13 shared-attn KV caches)
+# ---------------------------------------------------------------------------
+
+def _mamba2_block_with_state(cfg: ArchConfig, lp, x, ctx: ShardCtx):
+    """mamba2_block that also returns (conv_tail, final ssm state)."""
+    s_cfg = cfg.ssm
+    b, s_len, d = x.shape
+    d_in = s_cfg.expand * d
+    nh = d_in // s_cfg.head_dim
+    k = s_cfg.conv_kernel
+    h = apply_norm(cfg, x, lp["norm"])
+    xz = h @ lp["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = ctx.cons(x_in, ctx.b, None, ctx.m)
+    x_c = jax.nn.silu(_causal_conv1d(x_in, lp["conv_w"], lp["conv_b"]))
+    bc = h @ lp["bc_proj"]
+    b_ssm, c_ssm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(h @ lp["dt_proj"] + lp["dt_b2"]).astype(jnp.float32)
+    xh = x_c.reshape(b, s_len, nh, s_cfg.head_dim)
+    y, hf = _ssd_chunked(xh, dt, lp["A_log2"], b_ssm, c_ssm, min(s_cfg.chunk, s_len),
+                         bf16_scores=s_cfg.bf16_scores)
+    y = y + lp["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s_len, d_in)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), lp["gate_norm"])
+    out = y @ lp["out_proj"]
+    # hf: (B,H,N,P) → cache layout (B,H,N,P); conv tail: last K-1 inputs
+    return x + ctx.cons(out, ctx.b, None, None), x_in[:, -(k - 1):], hf
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache, ctx: ShardCtx = NO_SHARD, **kw):
+    """Prompt pass: final SSM/conv states per layer + per-invocation KV caches."""
+    x = params["embed"][tokens]
+    x = ctx.cons(x, ctx.b, None, None)
+    b, s = x.shape[0], x.shape[1]
+    max_len = cache["k"].shape[2] if "k" in cache else s
+    positions = jnp.arange(s)
+
+    def mamba_body(x, lp):
+        return jax.checkpoint(partial(_mamba2_block_with_state, cfg, ctx=ctx))(lp, x)
+
+    if cfg.attn_every:
+        shared = params["shared"]
+
+        def shared_with_cache(x):
+            h = apply_norm(cfg, x, shared["norm1"])
+            q, k, v = attn_qkv(cfg, shared["attn"], h, positions, ctx)
+            o = chunked_attention(q, k, v, causal=True, chunk_q=min(cfg.attn_chunk, s),
+                                  chunk_k=min(cfg.attn_chunk, s),
+                                  exact_causal=cfg.attn_exact_causal)
+            x = x + o.reshape(b, s, -1) @ shared["attn"]["wo"]
+            h2 = apply_norm(cfg, x, shared["norm2"])
+            x = ctx.cons(x + mlp_apply(cfg, shared["mlp"], h2, ctx), ctx.b, None, None)
+            kc = jnp.zeros((b, max_len) + k.shape[2:], k.dtype)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, 0, 1)
+            vc = jnp.zeros((b, max_len) + v.shape[2:], v.dtype)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, 0, 1)
+            return x, kc, vc
+
+        def group_body(x, gp):
+            def inner(x, lp):
+                x, ct, sf = mamba_body(x, lp)
+                return x, (ct, sf)
+
+            x, (cts, sfs) = xscan(inner, x, gp)
+            x, kc, vc = shared_with_cache(x)
+            return x, (cts, sfs, kc, vc)
+
+        x, (ct_g, sf_g, kc, vc) = xscan(group_body, x, params["groups"])
+
+        def tail_body(x, lp):
+            x, ct, sf = mamba_body(x, lp)
+            return x, (ct, sf)
+
+        x, (ct_t, sf_t) = xscan(tail_body, x, params["tail"])
+        conv_st = jnp.concatenate([ct_g.reshape((-1,) + ct_g.shape[2:]), ct_t])
+        ssm_st = jnp.concatenate([sf_g.reshape((-1,) + sf_g.shape[2:]), sf_t])
+        cache = dict(cache, conv=conv_st, ssm=ssm_st, k=kc, v=vc,
+                     pos=jnp.asarray(s, jnp.int32))
+    else:
+        def body(x, lp):
+            x, ct, sf = mamba_body(x, lp)
+            return x, (ct, sf)
+
+        x, (conv_st, ssm_st) = xscan(body, x, params["layers"])
+        cache = dict(cache, conv=conv_st, ssm=ssm_st, pos=jnp.asarray(s, jnp.int32))
+
+    h = apply_norm(cfg, x[:, -1], params["final_norm"])
+    logits = (h @ unembed_matrix(cfg, params)).astype(jnp.float32)
+    return logits, cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.jdtype
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    cache = {"conv": jnp.zeros((cfg.n_layers, batch, s.conv_kernel - 1, d_in), dtype),
+             "ssm": jnp.zeros((cfg.n_layers, batch, nh, s.d_state, s.head_dim), jnp.float32),
+             "pos": jnp.zeros((), jnp.int32)}
+    if cfg.attn_every:
+        g, _ = _split_layers(cfg)
+        cache["k"] = jnp.zeros((g, batch, max_len, cfg.kv_heads, cfg.hd), dtype)
+        cache["v"] = jnp.zeros((g, batch, max_len, cfg.kv_heads, cfg.hd), dtype)
+    return cache
+
+
+def _mamba2_decode(cfg: ArchConfig, lp, x, conv_st, ssm_st, ctx: ShardCtx):
+    """One-token mamba2 step. x: (B, d)."""
+    s_cfg = cfg.ssm
+    d_in = s_cfg.expand * cfg.d_model
+    nh = d_in // s_cfg.head_dim
+    h = apply_norm(cfg, x, lp["norm"])
+    xz = h @ lp["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([conv_st, x_in[:, None]], axis=1)
+    x_c = jax.nn.silu(jnp.einsum("bkd,dk->bd", window, lp["conv_w"]) + lp["conv_b"])
+    bc = h @ lp["bc_proj"]
+    b_ssm, c_ssm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(h @ lp["dt_proj"] + lp["dt_b2"]).astype(jnp.float32)   # (B,H)
+    a = jnp.exp(-jnp.exp(lp["A_log2"].astype(jnp.float32)) * dt)                # (B,H)
+    xh = (x_c.reshape(-1, nh, s_cfg.head_dim).astype(jnp.float32) * dt[..., None])
+    upd = jnp.einsum("bn,bhp->bhnp", b_ssm.astype(jnp.float32), xh)
+    ssm_new = a[:, :, None, None] * ssm_st + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_ssm.astype(jnp.float32), ssm_new)
+    y = y + lp["D"].astype(jnp.float32)[:, None] * x_c.reshape(-1, nh, s_cfg.head_dim).astype(jnp.float32)
+    y = y.reshape(-1, d_in)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), lp["gate_norm"])
+    return x + y @ lp["out_proj"], window[:, 1:], ssm_new
+
+
+def _shared_decode(cfg: ArchConfig, p, x, kc, vc, pos, ctx: ShardCtx):
+    b = x.shape[0]
+    h = apply_norm(cfg, x[:, None], p["norm1"])
+    q, k, v = attn_qkv(cfg, p["attn"], h, pos[None], ctx)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+    o = decode_attention(q[:, 0], kc, vc, pos + 1)
+    x = x + o.reshape(b, -1) @ p["attn"]["wo"]
+    h2 = apply_norm(cfg, x, p["norm2"])
+    return x + mlp_apply(cfg, p["mlp"], h2, ctx), kc, vc
+
+
+def decode_step(cfg: ArchConfig, params, cache, token, ctx: ShardCtx = NO_SHARD):
+    x = params["embed"][token]
+    pos = cache["pos"]
+    g, trailing = _split_layers(cfg) if cfg.attn_every else (0, cfg.n_layers)
+
+    if cfg.attn_every:
+        shared = params["shared"]
+        n_grouped = g * cfg.attn_every
+        conv_g = jax.tree.map(lambda a: a[:n_grouped].reshape((g, cfg.attn_every) + a.shape[1:]),
+                              cache["conv"])
+        ssm_g = cache["ssm"][:n_grouped].reshape((g, cfg.attn_every) + cache["ssm"].shape[1:])
+
+        def group_body(x, xs):
+            gp, conv_st, ssm_st, kc, vc = xs
+
+            def inner(x, ys):
+                lp, cs, ss = ys
+                x, cs, ss = _mamba2_decode(cfg, lp, x, cs, ss, ctx)
+                return x, (cs, ss)
+
+            x, (conv_st, ssm_st) = xscan(inner, x, (gp, conv_st, ssm_st))
+            x, kc, vc = _shared_decode(cfg, shared, x, kc, vc, pos, ctx)
+            return x, (conv_st, ssm_st, kc, vc)
+
+        x, (conv_g, ssm_g, kc, vc) = xscan(
+            group_body, x, (params["groups"], conv_g, ssm_g, cache["k"], cache["v"]))
+
+        def tail_body(x, ys):
+            lp, cs, ss = ys
+            x, cs, ss = _mamba2_decode(cfg, lp, x, cs, ss, ctx)
+            return x, (cs, ss)
+
+        x, (conv_t, ssm_t) = xscan(
+            tail_body, x, (params["tail"], cache["conv"][n_grouped:], cache["ssm"][n_grouped:]))
+        conv_new = jnp.concatenate([conv_g.reshape((-1,) + conv_g.shape[2:]), conv_t])
+        ssm_new = jnp.concatenate([ssm_g.reshape((-1,) + ssm_g.shape[2:]), ssm_t])
+        cache = dict(cache, conv=conv_new, ssm=ssm_new, k=kc, v=vc, pos=pos + 1)
+    else:
+        def body(x, ys):
+            lp, cs, ss = ys
+            x, cs, ss = _mamba2_decode(cfg, lp, x, cs, ss, ctx)
+            return x, (cs, ss)
+
+        x, (conv_new, ssm_new) = xscan(body, x, (params["layers"], cache["conv"], cache["ssm"]))
+        cache = dict(cache, conv=conv_new, ssm=ssm_new, pos=pos + 1)
+
+    h = apply_norm(cfg, x, params["final_norm"])
+    logits = (h @ unembed_matrix(cfg, params)).astype(jnp.float32)
+    return logits, cache

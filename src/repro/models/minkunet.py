@@ -1,0 +1,179 @@
+"""MinkUNet (3D semantic segmentation U-Net) on the sparse-conv engine.
+
+The paper's primary segmentation workload (SemanticKITTI-MinkUNet, Fig. 14).
+Structure (MinkUNet18-ish, width-scalable): stem → 4 encoder stages
+(stride-2 conv + residual submanifold blocks) → 4 decoder stages
+(transposed conv reusing the encoder's kernel map + skip concat + blocks).
+
+Layer *groups* (paper Fig. 12) fall out naturally: every submanifold conv at
+one stride shares a kernel map; each down/up-sample pair shares the strided
+map.  The per-group DataflowConfig dict is what the Sparse Autotuner tunes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dataflows as df
+from repro.core.kmap import KernelMap, build_kmap, transpose_kmap
+from repro.core.sparse_conv import (ConvSpec, TrainDataflowConfig, apply_conv,
+                                    init_conv)
+from repro.core.sparse_tensor import SparseTensor
+
+
+@dataclasses.dataclass(frozen=True)
+class MinkUNetConfig:
+    in_channels: int = 4
+    num_classes: int = 19
+    width: float = 1.0
+    enc_channels: tuple = (32, 64, 128, 256)
+    dec_channels: tuple = (256, 128, 96, 96)
+    blocks_per_stage: int = 2
+
+    def ch(self, c: float) -> int:
+        return max(8, int(c * self.width))
+
+
+def _bn_relu_init(c: int):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn_relu(p, st: SparseTensor, relu: bool = True) -> SparseTensor:
+    """Masked batch norm (stats over valid rows) + ReLU."""
+    mask = st.valid_mask[:, None]
+    n = jnp.maximum(st.num_valid, 1).astype(jnp.float32)
+    x = st.feats.astype(jnp.float32)
+    mean = jnp.sum(jnp.where(mask, x, 0), axis=0) / n
+    var = jnp.sum(jnp.where(mask, jnp.square(x - mean), 0), axis=0) / n
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    if relu:
+        y = jax.nn.relu(y)
+    return st.replace_feats(jnp.where(mask, y, 0).astype(st.feats.dtype))
+
+
+def init_params(cfg: MinkUNetConfig, key) -> dict:
+    keys = iter(jax.random.split(key, 128))
+    p: dict = {}
+    w = cfg.ch
+    c0 = w(cfg.enc_channels[0])
+    p["stem1"] = init_conv(next(keys), ConvSpec(cfg.in_channels, c0, 3))
+    p["stem1_bn"] = _bn_relu_init(c0)
+    p["stem2"] = init_conv(next(keys), ConvSpec(c0, c0, 3))
+    p["stem2_bn"] = _bn_relu_init(c0)
+
+    cin = c0
+    for i, ce in enumerate(cfg.enc_channels):
+        ce = w(ce)
+        p[f"down{i}"] = init_conv(next(keys), ConvSpec(cin, ce, 2, stride=2))
+        p[f"down{i}_bn"] = _bn_relu_init(ce)
+        for b in range(cfg.blocks_per_stage):
+            p[f"enc{i}b{b}_1"] = init_conv(next(keys), ConvSpec(ce, ce, 3))
+            p[f"enc{i}b{b}_1_bn"] = _bn_relu_init(ce)
+            p[f"enc{i}b{b}_2"] = init_conv(next(keys), ConvSpec(ce, ce, 3))
+            p[f"enc{i}b{b}_2_bn"] = _bn_relu_init(ce)
+        cin = ce
+
+    skips = [c0] + [w(c) for c in cfg.enc_channels[:-1]]
+    for i, cd in enumerate(cfg.dec_channels):
+        cd = w(cd)
+        p[f"up{i}"] = init_conv(next(keys), ConvSpec(cin, cd, 2, stride=2, transposed=True))
+        p[f"up{i}_bn"] = _bn_relu_init(cd)
+        cskip = skips[-(i + 1)]
+        for b in range(cfg.blocks_per_stage):
+            cin_b = cd + cskip if b == 0 else cd
+            p[f"dec{i}b{b}_1"] = init_conv(next(keys), ConvSpec(cin_b, cd, 3))
+            p[f"dec{i}b{b}_1_bn"] = _bn_relu_init(cd)
+            p[f"dec{i}b{b}_2"] = init_conv(next(keys), ConvSpec(cd, cd, 3))
+            p[f"dec{i}b{b}_2_bn"] = _bn_relu_init(cd)
+        cin = cd
+    p["head"] = {"w": jax.random.normal(next(keys), (cin, cfg.num_classes)) * cin ** -0.5}
+    return p
+
+
+def layer_signatures(cfg: MinkUNetConfig) -> Dict[str, tuple]:
+    """layer name → map-sharing signature (stride_in, K, kind) for grouping."""
+    sigs: Dict[str, tuple] = {"stem1": (1, 3, "sub"), "stem2": (1, 3, "sub")}
+    for i in range(len(cfg.enc_channels)):
+        sigs[f"down{i}"] = (2 ** i, 2, "down")
+        for b in range(cfg.blocks_per_stage):
+            sigs[f"enc{i}b{b}_1"] = (2 ** (i + 1), 3, "sub")
+            sigs[f"enc{i}b{b}_2"] = (2 ** (i + 1), 3, "sub")
+    n = len(cfg.dec_channels)
+    for i in range(n):
+        lvl = n - i - 1            # decoder level i undoes down{lvl}
+        sigs[f"up{i}"] = (2 ** lvl, 2, "up")
+        for b in range(cfg.blocks_per_stage):
+            sigs[f"dec{i}b{b}_1"] = (2 ** lvl, 3, "sub")
+            sigs[f"dec{i}b{b}_2"] = (2 ** lvl, 3, "sub")
+    return sigs
+
+
+def build_maps(st: SparseTensor) -> dict:
+    """Build every kernel map once (maps are shared within groups)."""
+    maps = {}
+    cur = st
+    maps[("sub", 1)] = build_kmap(cur, 3, 1)
+    tensors = {1: cur}
+    stride = 1
+    for i in range(4):
+        kd = build_kmap(cur, 2, 2)
+        maps[("down", stride)] = kd
+        cur = SparseTensor(coords=kd.out_coords, feats=jnp.zeros(
+            (kd.capacity, 1), st.feats.dtype), num_valid=kd.n_out, stride=kd.out_stride)
+        stride *= 2
+        tensors[stride] = cur
+        maps[("sub", stride)] = build_kmap(cur, 3, 1)
+    for lvl in range(3, -1, -1):
+        s = 2 ** lvl
+        maps[("up", s)] = transpose_kmap(maps[("down", s)], tensors[s])
+    return maps
+
+
+def _conv_bn(p, name, st, kmap, cfgs, relu=True):
+    st = apply_conv(p[name], st, kmap, cfgs)
+    return _bn_relu(p[f"{name}_bn"], st, relu)
+
+
+def apply(params, st: SparseTensor, cfg: MinkUNetConfig,
+          maps: Optional[dict] = None,
+          assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None) -> jax.Array:
+    """Returns per-point class logits (capacity, num_classes)."""
+    maps = maps or build_maps(st)
+    assignment = assignment or {}
+
+    def cfg_for(sig) -> TrainDataflowConfig:
+        return assignment.get(sig, TrainDataflowConfig())
+
+    def res_block(st, prefix, sig, kmap):
+        idn = st.feats
+        st = _conv_bn(params, f"{prefix}_1", st, kmap, cfg_for(sig))
+        st = apply_conv(params[f"{prefix}_2"], st, kmap, cfg_for(sig))
+        st = _bn_relu(params[f"{prefix}_2_bn"], st, relu=False)
+        y = jax.nn.relu(st.feats + (idn if idn.shape == st.feats.shape else 0))
+        return st.replace_feats(jnp.where(st.valid_mask[:, None], y, 0))
+
+    x = _conv_bn(params, "stem1", st, maps[("sub", 1)], cfg_for((1, 3, "sub")))
+    x = _conv_bn(params, "stem2", x, maps[("sub", 1)], cfg_for((1, 3, "sub")))
+    skips = [x]
+    stride = 1
+    for i in range(len(cfg.enc_channels)):
+        x = _conv_bn(params, f"down{i}", x, maps[("down", stride)], cfg_for((stride, 2, "down")))
+        stride *= 2
+        for b in range(cfg.blocks_per_stage):
+            x = res_block(x, f"enc{i}b{b}", (stride, 3, "sub"), maps[("sub", stride)])
+        if i < len(cfg.enc_channels) - 1:
+            skips.append(x)
+
+    n = len(cfg.dec_channels)
+    for i in range(n):
+        stride //= 2
+        x = _conv_bn(params, f"up{i}", x, maps[("up", stride)], cfg_for((stride, 2, "up")))
+        skip = skips[-(i + 1)]
+        x = x.replace_feats(jnp.concatenate([x.feats, skip.feats], axis=1))
+        for b in range(cfg.blocks_per_stage):
+            x = res_block(x, f"dec{i}b{b}", (stride, 3, "sub"), maps[("sub", stride)])
+
+    return x.feats @ params["head"]["w"]

@@ -1,0 +1,301 @@
+"""Decoder-only transformer covering the dense / MoE / VLM / audio families.
+
+One implementation parameterized by ArchConfig:
+* layer stack = `lax.scan` over stacked params (+ jax.checkpoint remat);
+* GQA attention with RoPE, optional QKV bias, optional sliding window;
+* SwiGLU or GELU MLP, or MoE (models/moe.py — the paper-technique carryover);
+* VLM: groups of `cross_every` self layers followed by one gated cross-attn
+  layer over precomputed image-patch embeddings (frontend stub);
+* audio (musicgen): frontend stub feeds frame embeddings directly
+  (`embed_input=False`), backbone is the standard decoder.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+from repro.models.lm_common import (ArchConfig, NO_SHARD, ShardCtx, _rand, xscan,
+                                    apply_norm, attn_apply, attn_init,
+                                    attn_qkv, chunked_attention, chunked_xent,
+                                    decode_attention, embed_init, init_norm,
+                                    mlp_apply, mlp_init, rope, unembed_matrix)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ArchConfig, key, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": init_norm(cfg, cfg.d_model, dtype),
+         "attn": attn_init(cfg, k1, dtype),
+         "norm2": init_norm(cfg, cfg.d_model, dtype)}
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.moe_init(cfg, k2, dtype)
+    else:
+        p["mlp"] = mlp_init(cfg, k2, dtype)
+    return p
+
+
+def _cross_layer_init(cfg: ArchConfig, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_norm(cfg, cfg.d_model, dtype),
+            "attn": attn_init(cfg, k1, dtype),
+            "norm2": init_norm(cfg, cfg.d_model, dtype),
+            "mlp": mlp_init(cfg, k2, dtype),
+            "gate_attn": jnp.zeros((), dtype),
+            "gate_mlp": jnp.zeros((), dtype)}
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = cfg.jdtype
+    ke, kl, kf = jax.random.split(key, 3)
+    params = {}
+    if cfg.embed_input:
+        params.update(embed_init(cfg, ke, dtype))
+    else:
+        params["unembed"] = _rand(ke, (cfg.d_model, cfg.vocab), dtype)
+    params["final_norm"] = init_norm(cfg, cfg.d_model, dtype)
+
+    if cfg.cross_every:
+        g = cfg.n_layers // (cfg.cross_every + 1)
+        n_self = g * cfg.cross_every
+        self_keys = jax.random.split(kl, n_self)
+        cross_keys = jax.random.split(kf, g)
+        self_p = jax.vmap(lambda k: _layer_init(cfg, k, dtype))(self_keys)
+        # regroup (n_self, ...) → (g, cross_every, ...)
+        self_p = jax.tree.map(lambda x: x.reshape((g, cfg.cross_every) + x.shape[1:]), self_p)
+        cross_p = jax.vmap(lambda k: _cross_layer_init(cfg, k, dtype))(cross_keys)
+        params["self_layers"] = self_p
+        params["cross_layers"] = cross_p
+    else:
+        keys = jax.random.split(kl, cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _layer_init(cfg, k, dtype))(keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _self_block(cfg: ArchConfig, lp, x, positions, ctx: ShardCtx):
+    h = apply_norm(cfg, x, lp["norm1"])
+    x = x + attn_apply(cfg, lp["attn"], h, positions, ctx)
+    h2 = apply_norm(cfg, x, lp["norm2"])
+    if cfg.moe is not None:
+        x = x + moe_mod.moe_apply(cfg, lp["moe"], h2, ctx)
+    else:
+        x = x + mlp_apply(cfg, lp["mlp"], h2, ctx)
+    return ctx.cons(x, ctx.b, None, None)
+
+
+def _cross_block(cfg: ArchConfig, lp, x, img_kv, ctx: ShardCtx):
+    """Gated cross-attention layer (llama-3.2-vision style)."""
+    b, s, _ = x.shape
+    h = apply_norm(cfg, x, lp["norm1"])
+    q, _, _ = attn_qkv(cfg, lp["attn"], h, jnp.arange(s), ctx, use_rope=False)
+    k, v = img_kv
+    o = chunked_attention(q, k, v, causal=False, chunk_q=min(cfg.attn_chunk, s),
+                          chunk_k=k.shape[1])
+    o = o.reshape(b, s, -1) @ lp["attn"]["wo"]
+    x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * o
+    h2 = apply_norm(cfg, x, lp["norm2"])
+    x = x + jnp.tanh(lp["gate_mlp"]).astype(x.dtype) * mlp_apply(cfg, lp["mlp"], h2, ctx)
+    return ctx.cons(x, ctx.b, None, None)
+
+
+def _img_kv(cfg: ArchConfig, lp, img_emb, ctx: ShardCtx):
+    """Precompute cross-attn K/V from the (stubbed) image embeddings."""
+    b, n, _ = img_emb.shape
+    hkv, hd = cfg.kv_heads, cfg.hd
+    k = (img_emb @ lp["attn"]["wk"]).reshape(b, n, hkv, hd)
+    v = (img_emb @ lp["attn"]["wv"]).reshape(b, n, hkv, hd)
+    if cfg.qkv_bias:
+        k = k + lp["attn"]["bk"].reshape(hkv, hd)
+        v = v + lp["attn"]["bv"].reshape(hkv, hd)
+    return k, v
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens_or_embeds, ctx: ShardCtx = NO_SHARD,
+                   img_emb: Optional[jax.Array] = None) -> jax.Array:
+    if cfg.embed_input:
+        x = params["embed"][tokens_or_embeds]
+    else:
+        x = tokens_or_embeds.astype(cfg.jdtype)
+    x = ctx.cons(x, ctx.b, None, None)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    if cfg.cross_every:
+        def group_body(x, gp):
+            sp, cp = gp
+
+            def self_body(x, lp):
+                return jax.checkpoint(partial(_self_block, cfg, ctx=ctx))(lp, x, positions), None
+
+            x, _ = xscan(self_body, x, sp)
+            kv = _img_kv(cfg, cp, img_emb, ctx)
+            x = jax.checkpoint(partial(_cross_block, cfg, ctx=ctx))(cp, x, kv)
+            return x, None
+
+        x, _ = xscan(group_body, x, (params["self_layers"], params["cross_layers"]))
+    else:
+        def body(x, lp):
+            return jax.checkpoint(partial(_self_block, cfg, ctx=ctx))(lp, x, positions), None
+
+        x, _ = xscan(body, x, params["layers"])
+    return apply_norm(cfg, x, params["final_norm"])
+
+
+def loss_fn(cfg: ArchConfig, params, batch, ctx: ShardCtx = NO_SHARD) -> jax.Array:
+    inputs = batch["embeds"] if not cfg.embed_input else batch["tokens"]
+    h = forward_hidden(cfg, params, inputs, ctx, img_emb=batch.get("img_emb"))
+    return chunked_xent(cfg, params, h, batch["labels"], ctx)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with a KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.jdtype
+    hkv, hd = cfg.kv_heads, cfg.hd
+    if cfg.cross_every:
+        g = cfg.n_layers // (cfg.cross_every + 1)
+        n_self = g * cfg.cross_every
+        return {"k": jnp.zeros((n_self, batch, max_len, hkv, hd), dtype),
+                "v": jnp.zeros((n_self, batch, max_len, hkv, hd), dtype),
+                "img_k": jnp.zeros((g, batch, cfg.n_img_tokens, hkv, hd), dtype),
+                "img_v": jnp.zeros((g, batch, cfg.n_img_tokens, hkv, hd), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros((cfg.n_layers, batch, max_len, hkv, hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, hkv, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: ArchConfig, params, tokens_or_embeds, cache,
+            ctx: ShardCtx = NO_SHARD, img_emb=None):
+    """Run the full prompt, fill the cache, return last-token logits."""
+    if cfg.embed_input:
+        x = params["embed"][tokens_or_embeds]
+    else:
+        x = tokens_or_embeds.astype(cfg.jdtype)
+    x = ctx.cons(x, ctx.b, None, None)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    max_len = cache["k"].shape[2]
+
+    def attn_and_cache(lp, x):
+        h = apply_norm(cfg, x, lp["norm1"])
+        q, k, v = attn_qkv(cfg, lp["attn"], h, positions, ctx)
+        o = chunked_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                              chunk_q=min(cfg.attn_chunk, s), chunk_k=min(cfg.attn_chunk, s),
+                              exact_causal=cfg.attn_exact_causal)
+        x = x + o.reshape(b, s, -1) @ lp["attn"]["wo"]
+        kc = jnp.zeros((b, max_len) + k.shape[2:], k.dtype)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, 0, 1)
+        vc = jnp.zeros((b, max_len) + v.shape[2:], v.dtype)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, 0, 1)
+        return x, kc, vc
+
+    if cfg.cross_every:
+        def group_body(x, gp):
+            sp, cp = gp
+
+            def self_body(x, lp):
+                x, kc, vc = attn_and_cache(lp, x)
+                h2 = apply_norm(cfg, x, lp["norm2"])
+                x = x + mlp_apply(cfg, lp["mlp"], h2, ctx)
+                return ctx.cons(x, ctx.b, None, None), (kc, vc)
+
+            x, (kcs, vcs) = xscan(self_body, x, sp)
+            ik, iv = _img_kv(cfg, cp, img_emb, ctx)
+            x = _cross_block(cfg, cp, x, (ik, iv), ctx)
+            return x, (kcs, vcs, ik, iv)
+
+        x, (kc, vc, ik, iv) = xscan(group_body, x, (params["self_layers"], params["cross_layers"]))
+        cache = dict(cache, k=kc.reshape((-1,) + kc.shape[2:]),
+                     v=vc.reshape((-1,) + vc.shape[2:]),
+                     img_k=ik, img_v=iv, pos=jnp.asarray(s, jnp.int32))
+    else:
+        def body(x, lp):
+            x, kc, vc = attn_and_cache(lp, x)
+            h2 = apply_norm(cfg, x, lp["norm2"])
+            if cfg.moe is not None:
+                x = x + moe_mod.moe_apply(cfg, lp["moe"], h2, ctx)
+            else:
+                x = x + mlp_apply(cfg, lp["mlp"], h2, ctx)
+            return ctx.cons(x, ctx.b, None, None), (kc, vc)
+
+        x, (kc, vc) = xscan(body, x, params["layers"])
+        cache = dict(cache, k=kc, v=vc, pos=jnp.asarray(s, jnp.int32))
+
+    h = apply_norm(cfg, x[:, -1], params["final_norm"])
+    logits = (h @ unembed_matrix(cfg, params)).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, token, ctx: ShardCtx = NO_SHARD):
+    """One decode step. token: (B,) int32 (or (B, d) embeds for audio)."""
+    if cfg.embed_input:
+        x = params["embed"][token]                      # (B, d)
+    else:
+        x = token.astype(cfg.jdtype)
+    pos = cache["pos"]
+    b = x.shape[0]
+    x = x[:, None, :]                                   # (B, 1, d)
+    hkv, hd = cfg.kv_heads, cfg.hd
+
+    def attn_one(lp, x, kc, vc):
+        h = apply_norm(cfg, x, lp["norm1"])
+        q, k, v = attn_qkv(cfg, lp["attn"], h, pos[None], ctx)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = decode_attention(q[:, 0], kc, vc, pos + 1, window=cfg.sliding_window)
+        x = x + (o.reshape(b, -1) @ lp["attn"]["wo"])[:, None]
+        return x, kc, vc
+
+    if cfg.cross_every:
+        def group_body(x, gp):
+            sp, cp, kcs, vcs, ik, iv = gp
+
+            def self_body(x, xs):
+                lp, kc, vc = xs
+                x, kc, vc = attn_one(lp, x, kc, vc)
+                h2 = apply_norm(cfg, x, lp["norm2"])
+                x = x + mlp_apply(cfg, lp["mlp"], h2, ctx)
+                return x, (kc, vc)
+
+            x, (kcs, vcs) = xscan(self_body, x, (sp, kcs, vcs))
+            x = _cross_block(cfg, cp, x, (ik, iv), ctx)
+            return x, (kcs, vcs)
+
+        g = params["cross_layers"]["gate_attn"].shape[0]
+        kc = cache["k"].reshape((g, cfg.cross_every) + cache["k"].shape[1:])
+        vc = cache["v"].reshape((g, cfg.cross_every) + cache["v"].shape[1:])
+        x, (kc, vc) = xscan(group_body, x,
+                                   (params["self_layers"], params["cross_layers"],
+                                    kc, vc, cache["img_k"], cache["img_v"]))
+        cache = dict(cache, k=kc.reshape((-1,) + kc.shape[2:]),
+                     v=vc.reshape((-1,) + vc.shape[2:]), pos=pos + 1)
+    else:
+        def body(x, xs):
+            lp, kc, vc = xs
+            x, kc, vc = attn_one(lp, x, kc, vc)
+            h2 = apply_norm(cfg, x, lp["norm2"])
+            if cfg.moe is not None:
+                x = x + moe_mod.moe_apply(cfg, lp["moe"], h2, ctx)
+            else:
+                x = x + mlp_apply(cfg, lp["mlp"], h2, ctx)
+            return ctx.cons(x, ctx.b, None, None), (kc, vc)
+
+        x, (kc, vc) = xscan(body, x, (params["layers"], cache["k"], cache["v"]))
+        cache = dict(cache, k=kc, v=vc, pos=pos + 1)
+
+    h = apply_norm(cfg, x[:, 0], params["final_norm"])
+    logits = (h @ unembed_matrix(cfg, params)).astype(jnp.float32)
+    return logits, cache

@@ -1,0 +1,110 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+AdamW with decoupled weight decay and global-norm clipping; mixed-precision
+posture: params may be bf16 while the first/second moments and the master
+copy are fp32 (``MixedPrecisionPolicy``).  A factored second-moment option
+(Adafactor-style) exists for the 1T-param cells where full Adam state cannot
+fit the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    factored: bool = False       # factored 2nd moment for giant models
+    state_dtype: Any = jnp.float32
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def _factored_dims(shape):
+    """Pick the two largest trailing dims for row/col factoring (≥2D only)."""
+    if len(shape) < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    def per_leaf(p):
+        if cfg.factored and _factored_dims(p.shape) is not None:
+            r, c = _factored_dims(p.shape)
+            vr = jnp.zeros(p.shape[:c] , cfg.state_dtype)           # reduce over c
+            vc = jnp.zeros(p.shape[:r] + p.shape[r + 1:], cfg.state_dtype)  # reduce over r
+            return {"m": jnp.zeros_like(p, cfg.state_dtype), "vr": vr, "vc": vc}
+        return {"m": jnp.zeros_like(p, cfg.state_dtype),
+                "v": jnp.zeros_like(p, cfg.state_dtype)}
+
+    return {"mu": jax.tree.map(per_leaf, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def per_leaf(p, g, s):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * s["m"].astype(jnp.float32) + (1 - cfg.b1) * g32
+        if "v" in s:
+            v = cfg.b2 * s["v"].astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+            vhat = v / b2c
+            new_s = {"m": m.astype(cfg.state_dtype), "v": v.astype(cfg.state_dtype)}
+        else:
+            r, c = _factored_dims(p.shape)
+            g2 = jnp.square(g32)
+            vr = cfg.b2 * s["vr"].astype(jnp.float32) + (1 - cfg.b2) * jnp.mean(g2, axis=c)
+            vc = cfg.b2 * s["vc"].astype(jnp.float32) + (1 - cfg.b2) * jnp.mean(g2, axis=r)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = (jnp.expand_dims(vr, c) * jnp.expand_dims(vc, r)
+                    / jnp.expand_dims(denom, r)) / b2c
+            new_s = {"m": m.astype(cfg.state_dtype), "vr": vr.astype(cfg.state_dtype),
+                     "vc": vc.astype(cfg.state_dtype)}
+        upd = (m / b1c) / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype)
+        return new_p, new_s
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["mu"])
+    out = [per_leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    return new_params, {"mu": new_mu, "step": step}, gnorm
+
+
+def opt_state_pspecs(param_pspecs, cfg: AdamWConfig):
+    """Optimizer-state partition specs mirror the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+
+    def per_leaf(spec):
+        if cfg.factored:
+            # best effort: factored leaves drop the reduced axis; replicate
+            return {"m": spec, "vr": P(), "vc": P()}
+        return {"m": spec, "v": spec}
+
+    return {"mu": jax.tree.map(per_leaf, param_pspecs,
+                               is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
+            "step": jax.sharding.PartitionSpec()}

@@ -1,0 +1,91 @@
+"""Sparse Autotuner: group partition, greedy search, training binding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dataflows as df
+from repro.core import generator
+from repro.core.autotuner import Autotuner, GroupInfo, TrainingAutotuner, partition_groups
+from repro.core.sparse_conv import TrainDataflowConfig
+
+
+def test_partition_groups_by_signature():
+    sigs = {"conv_a": (1, 3, "sub"), "conv_b": (1, 3, "sub"),
+            "down": (1, 2, "down"), "conv_c": (2, 3, "sub")}
+    groups = partition_groups(sigs)
+    assert len(groups) == 3
+    sizes = sorted(len(g.layer_names) for g in groups)
+    assert sizes == [1, 1, 2]
+
+
+def _synthetic_measure(latency_table):
+    """End-to-end latency = Σ_g table[g][cfg] (+ fixed overhead)."""
+    def measure(assign):
+        return 1.0 + sum(latency_table[g][c] for g, c in assign.items())
+
+    return measure
+
+
+def test_greedy_finds_per_group_optimum():
+    space = generator.design_space()
+    groups = [GroupInfo("g0", ["a"]), GroupInfo("g1", ["b"])]
+    rng = np.random.default_rng(0)
+    table = {g.name: {c: float(rng.uniform(1, 10)) for c in space} for g in groups}
+    tuner = Autotuner(groups, space, _synthetic_measure(table))
+    best = tuner.tune()
+    for g in groups:
+        assert table[g.name][best[g.name]] == min(table[g.name].values())
+    # tuner complexity is linear: |groups| × |space| measurements
+    assert len(tuner.log) == len(groups) * len(space)
+
+
+def test_design_space_is_superset_of_spconv2():
+    full = generator.design_space()
+    sub = generator.spconv_v2_space()
+    assert set(sub) <= set(full)
+    # the paper's additions: unsorted (splits=0), splits > 2, fetch-on-demand
+    assert any(c.dataflow == "implicit_gemm" and c.n_splits == 0 for c in full)
+    assert any(c.dataflow == "implicit_gemm" and c.n_splits > 2 for c in full)
+    assert any(c.dataflow == "fetch_on_demand" for c in full)
+
+
+def test_training_tuner_binding_schemes():
+    space = [df.DataflowConfig("gather_scatter"),
+             df.DataflowConfig("implicit_gemm", n_splits=1)]
+    groups = [GroupInfo("g0", ["a"])]
+
+    # build a measure where fwd prefers implicit, wgrad prefers gather
+    def measure(assign):
+        t = 0.0
+        for g, c3 in assign.items():
+            t += 1.0 if c3.fwd.dataflow == "implicit_gemm" else 2.0
+            t += 1.0 if c3.dgrad.dataflow == "implicit_gemm" else 2.0
+            t += 1.0 if c3.wgrad.dataflow == "gather_scatter" else 3.0
+        return t
+
+    for scheme in ("bind_fwd_dgrad", "bind_dgrad_wgrad", "bind_all"):
+        out = TrainingAutotuner(groups, space, measure, scheme).tune()["g0"]
+        assert isinstance(out, TrainDataflowConfig)
+
+    # bind_fwd_dgrad can reach the true optimum here
+    out = TrainingAutotuner(groups, space, measure, "bind_fwd_dgrad").tune()["g0"]
+    assert out.fwd.dataflow == "implicit_gemm"
+    assert out.dgrad.dataflow == "implicit_gemm"
+    assert out.wgrad.dataflow == "gather_scatter"
+
+
+def test_scheme_choice_by_device():
+    assert TrainingAutotuner.choose_scheme(high_parallelism=True) == "bind_dgrad_wgrad"
+    assert TrainingAutotuner.choose_scheme(high_parallelism=False) == "bind_fwd_dgrad"
+
+
+def test_adaptive_tiles_switch_on_macs():
+    from repro.core.kmap import build_kmap
+    from tests.test_kmap import random_tensor
+
+    stx = random_tensor(0, n=60, cap=64, channels=4)
+    kmap = build_kmap(stx, 3, 1)
+    small = generator.adaptive_tiles(kmap, 4, 8, threshold_macs=1e12)
+    large = generator.adaptive_tiles(kmap, 4, 8, threshold_macs=1.0)
+    assert small == generator.SMALL_TILES
+    assert large == generator.LARGE_TILES

@@ -1,0 +1,63 @@
+"""R-GCN on the sparse-conv dataflow engine vs a dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dataflows as df
+from repro.core.graph_conv import edges_to_kmap, rgcn_layer
+from repro.data.synthetic import typed_graph
+
+
+def _dense_rgcn(feats, w_rel, w_self, src, dst, etype, n_nodes, normalize=True):
+    out = feats @ w_self
+    r = w_rel.shape[0]
+    deg = np.ones((r, n_nodes))
+    srcn, dstn, etn = map(np.asarray, (src, dst, etype))
+    if normalize:
+        for s, d, e in zip(srcn, dstn, etn):
+            deg[e, d] += 1
+        deg = np.maximum(deg - 1, 1)
+    acc = np.zeros((n_nodes, w_rel.shape[-1]))
+    msgs = np.asarray(feats) @ np.asarray(w_rel)     # (R, N, C)
+    for s, d, e in zip(srcn, dstn, etn):
+        acc[d] += msgs[e, s] / (deg[e, d] if normalize else 1.0)
+    return np.asarray(out) + acc
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+def test_rgcn_matches_dense(normalize):
+    n_nodes, n_edges, r, c = 32, 100, 3, 8
+    src, dst, etype = typed_graph(jax.random.PRNGKey(0), n_nodes, n_edges, r)
+    feats = jax.random.normal(jax.random.PRNGKey(1), (n_nodes, c))
+    w_rel = jax.random.normal(jax.random.PRNGKey(2), (r, c, 16)) * 0.3
+    w_self = jax.random.normal(jax.random.PRNGKey(3), (c, 16)) * 0.3
+    kmap = edges_to_kmap(src, dst, etype, r, n_nodes, cap_per_rel=n_edges)
+    got = rgcn_layer(feats, w_rel, w_self, kmap, normalize=normalize)
+    ref = _dense_rgcn(feats, w_rel, w_self, src, dst, etype, n_nodes, normalize)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_relation_capacity_truncation_is_safe():
+    """cap_per_rel smaller than a relation's edge count drops edges, never corrupts."""
+    n_nodes = 16
+    src = jnp.arange(10, dtype=jnp.int32)
+    dst = jnp.zeros(10, jnp.int32)
+    etype = jnp.zeros(10, jnp.int32)
+    kmap = edges_to_kmap(src, dst, etype, 1, n_nodes, cap_per_rel=4)
+    assert int(kmap.ws_count[0]) == 10          # true count reported
+    assert int((kmap.ws_in[0] >= 0).sum()) == 4  # but only cap edges kept
+    feats = jnp.ones((n_nodes, 2))
+    w = jnp.ones((1, 2, 2))
+    out = rgcn_layer(feats, w, jnp.zeros((2, 2)), kmap, normalize=False)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_implicit_gemm_rejected_for_graphs():
+    src, dst, etype = typed_graph(jax.random.PRNGKey(0), 8, 16, 2)
+    kmap = edges_to_kmap(src, dst, etype, 2, 8, cap_per_rel=16)
+    feats = jnp.ones((8, 4))
+    w = jnp.ones((2, 4, 4))
+    with pytest.raises(AssertionError):
+        rgcn_layer(feats, w, jnp.zeros((4, 4)), kmap,
+                   cfg=df.DataflowConfig("implicit_gemm"))

@@ -1,0 +1,161 @@
+"""Kernel-map construction invariants (unit + hypothesis property tests)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dataflows as df
+from repro.core import kmap as km
+from repro.core.sparse_tensor import INVALID_COORD, make_sparse_tensor, voxelize
+
+
+def random_tensor(seed, n=100, cap=128, channels=8, extent=8, batch=1, d=3):
+    rng = np.random.default_rng(seed)
+    coords = rng.integers(0, extent, size=(n, d))
+    b = rng.integers(0, batch, size=(n, 1))
+    coords = np.concatenate([b, coords], axis=1)
+    coords = np.unique(coords, axis=0)
+    n = coords.shape[0]
+    feats = rng.standard_normal((cap, channels)).astype(np.float32)
+    pad = np.zeros((cap - n, d + 1), np.int32)
+    return make_sparse_tensor(jnp.asarray(np.concatenate([coords, pad])),
+                              jnp.asarray(feats), n)
+
+
+def brute_force_map(coords, n_valid, offsets, stride=1):
+    """O(N²) reference for the output-stationary map (stride-1 submanifold)."""
+    coords = np.asarray(coords)[:n_valid]
+    lut = {tuple(c): i for i, c in enumerate(coords)}
+    m = -np.ones((len(coords), len(offsets)), np.int32)
+    for i, c in enumerate(coords):
+        for k, off in enumerate(offsets):
+            q = (c[0],) + tuple(c[1:] + off)
+            if q in lut:
+                m[i, k] = lut[q]
+    return m
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_submanifold_map_matches_bruteforce(seed):
+    stx = random_tensor(seed)
+    kmap = km.build_kmap(stx, 3, 1)
+    offs = km.kernel_offsets(3, 3)
+    ref = brute_force_map(stx.coords, int(stx.num_valid), np.asarray(offs))
+    got = np.asarray(kmap.m_out)[: int(stx.num_valid)]
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_center_offset_is_identity():
+    stx = random_tensor(3)
+    kmap = km.build_kmap(stx, 3, 1)
+    n = int(stx.num_valid)
+    # center-first ordering: column 0 is δ=0 → identity map
+    np.testing.assert_array_equal(np.asarray(kmap.m_out)[:n, 0], np.arange(n))
+
+
+def test_ws_consistent_with_mout():
+    stx = random_tensor(4)
+    kmap = km.build_kmap(stx, 3, 1)
+    m = np.asarray(kmap.m_out)
+    ws_in, ws_out, cnt = (np.asarray(kmap.ws_in), np.asarray(kmap.ws_out),
+                          np.asarray(kmap.ws_count))
+    for k in range(kmap.volume):
+        pairs_m = {(m[n, k], n) for n in range(m.shape[0]) if m[n, k] >= 0}
+        pairs_w = {(ws_in[k, i], ws_out[k, i]) for i in range(cnt[k])}
+        assert pairs_m == pairs_w
+        assert (ws_in[k, cnt[k]:] == -1).all()
+
+
+def test_bitmask_matches_hits():
+    stx = random_tensor(5)
+    kmap = km.build_kmap(stx, 3, 1)
+    m = np.asarray(kmap.m_out)
+    bm = np.asarray(kmap.bitmask)
+    n = int(stx.num_valid)
+    for i in range(n):
+        expect = sum(1 << k for k in range(27) if m[i, k] >= 0)
+        assert bm[i] == expect
+
+
+def test_strided_output_coords_are_unique_and_on_grid():
+    stx = random_tensor(6, extent=16)
+    kmap = km.build_kmap(stx, 2, 2)
+    n = int(kmap.n_out)
+    oc = np.asarray(kmap.out_coords)[:n]
+    assert (oc[:, 1:] % 2 == 0).all()
+    assert len({tuple(c) for c in oc}) == n
+    assert kmap.out_stride == 2
+
+
+def test_transpose_kmap_is_transpose_relation():
+    stx = random_tensor(7, extent=16)
+    fwd = km.build_kmap(stx, 2, 2)
+    inv = km.transpose_kmap(fwd, stx)
+    fi, fo = np.asarray(fwd.ws_in), np.asarray(fwd.ws_out)
+    ii, io = np.asarray(inv.ws_in), np.asarray(inv.ws_out)
+    for k in range(fwd.volume):
+        fwd_pairs = {(a, b) for a, b in zip(fi[k], fo[k]) if a >= 0}
+        inv_pairs = {(b, a) for a, b in zip(ii[k], io[k]) if a >= 0}
+        assert fwd_pairs == inv_pairs
+    # and the output-stationary form agrees with the pair lists
+    m = np.asarray(inv.m_out)
+    for k in range(inv.volume):
+        pairs_m = {(m[n, k], n) for n in range(m.shape[0]) if m[n, k] >= 0}
+        pairs_w = {(a, b) for a, b in zip(ii[k], io[k]) if a >= 0}
+        assert pairs_m == pairs_w
+
+
+def test_split_plan_partitions_and_permutes():
+    stx = random_tensor(8)
+    kmap = km.build_kmap(stx, 3, 1)
+    for s in (1, 2, 3, 5):
+        plan = km.make_split_plan(kmap, s)
+        assert plan.num_splits == s
+        # ranges partition [0, 27)
+        flat = [i for a, b in plan.ranges for i in range(a, b)]
+        assert flat == list(range(27))
+        for i in range(s):
+            order = np.asarray(plan.order[i])
+            assert sorted(order) == list(range(kmap.capacity))
+            inv = np.asarray(plan.inv_order[i])
+            np.testing.assert_array_equal(order[inv], np.arange(kmap.capacity))
+
+
+def test_sorting_reduces_tile_occupancy():
+    stx = random_tensor(9, n=400, cap=512, extent=10)
+    kmap = km.build_kmap(stx, 3, 1)
+    unsorted = km.redundancy_stats(kmap, km.make_split_plan(kmap, 1, sort=False), 16)
+    sorted_ = km.redundancy_stats(kmap, km.make_split_plan(kmap, 1, sort=True), 16)
+    assert float(sorted_["issued_rows"]) <= float(unsorted["issued_rows"])
+    assert float(sorted_["overhead"]) >= 1.0 - 1e-6
+
+
+@hypothesis.given(seed=st.integers(0, 10_000),
+                  extent=st.integers(3, 12),
+                  kernel=st.sampled_from([2, 3]))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_dataflows_agree(seed, extent, kernel):
+    """All three dataflows compute identical results on random clouds."""
+    stx = random_tensor(seed, n=60, cap=64, channels=4, extent=extent)
+    stride = 2 if kernel == 2 else 1
+    kmap = km.build_kmap(stx, kernel, stride)
+    kd = kernel ** 3
+    w = jax.random.normal(jax.random.PRNGKey(seed), (kd, 4, 8)) * 0.3
+    y1 = df.sparse_conv_forward(stx.feats, w, kmap, df.DataflowConfig("gather_scatter"))
+    y2 = df.sparse_conv_forward(stx.feats, w, kmap, df.DataflowConfig("fetch_on_demand"))
+    y3 = df.sparse_conv_forward(stx.feats, w, kmap, df.DataflowConfig("implicit_gemm"))
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(y1, y3, rtol=1e-4, atol=1e-5)
+
+
+def test_voxelize_dedups_and_keeps_extent():
+    pts = jnp.asarray(np.random.default_rng(0).uniform(0, 5, (200, 3)))
+    feats = jnp.ones((200, 2))
+    stx = voxelize(pts, feats, 1.0, capacity=256)
+    n = int(stx.num_valid)
+    coords = np.asarray(stx.coords[:n])
+    assert len({tuple(c) for c in coords}) == n
+    assert (np.asarray(stx.coords[n:]) == int(INVALID_COORD)).all()
+    assert coords[:, 1:].max() <= 5

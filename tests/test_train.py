@@ -1,0 +1,138 @@
+"""Optimizer, checkpointing (incl. elastic restore), fault-tolerant loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train import compression
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, train_loop
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = opt.AdamWConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                          clip_norm=1e9)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    state = opt.init_opt_state(p, cfg)
+    new_p, state, _ = opt.adamw_update(p, g, state, cfg)
+    # numpy reference
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.001 * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    ref = np.asarray(p["w"]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(new_p["w"], ref, rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(norm), 10.0)
+    assert np.isclose(float(opt.global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_factored_second_moment_reduces_state():
+    cfg = opt.AdamWConfig(factored=True)
+    p = {"w": jnp.zeros((32, 16)), "b": jnp.zeros((8,))}
+    st = opt.init_opt_state(p, cfg)
+    assert "vr" in st["mu"]["w"] and st["mu"]["w"]["vr"].shape == (32,)
+    assert st["mu"]["w"]["vc"].shape == (16,)
+    assert "v" in st["mu"]["b"]            # 1-D params stay unfactored
+    g = {"w": jnp.ones((32, 16)), "b": jnp.ones((8,))}
+    new_p, _, _ = opt.adamw_update(p, g, st, cfg)
+    assert bool(jnp.isfinite(new_p["w"]).all())
+
+
+def test_optimizer_descends_quadratic():
+    cfg = opt.AdamWConfig(lr=0.05, weight_decay=0.0)
+    p = {"w": jnp.asarray([3.0, -4.0])}
+    state = opt.init_opt_state(p, cfg)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, state, _ = opt.adamw_update(p, g, state, cfg)
+    assert float(jnp.abs(p["w"]).max()) < 0.2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32)}}
+    ckpt.save(tmp_path, 7, tree, extra={"data_offset": 7})
+    assert ckpt.latest_step(tmp_path) == 7
+    restored, step, extra = ckpt.restore(tmp_path, None, tree)
+    assert step == 7 and extra["data_offset"] == 7
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_async_and_latest(tmp_path):
+    tree = {"w": jnp.ones((4,))}
+    ckpt.save_async(tmp_path, 1, tree)
+    ckpt.save_async(tmp_path, 2, jax.tree.map(lambda x: x * 2, tree))
+    ckpt.wait_pending()
+    assert ckpt.latest_step(tmp_path) == 2
+    restored, _, _ = ckpt.restore(tmp_path, None, tree)
+    np.testing.assert_array_equal(restored["w"], 2 * np.ones((4,)))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A .tmp directory must never be treated as a checkpoint."""
+    tree = {"w": jnp.ones((2,))}
+    ckpt.save(tmp_path, 1, tree)
+    (tmp_path / "step_2.tmp").mkdir()
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def _toy_problem():
+    target = jnp.asarray([1.0, -2.0])
+
+    def step_fn(params, state, batch):
+        def loss(p):
+            return jnp.sum((p["w"] - target) ** 2) + 0.0 * jnp.sum(batch)
+
+        l, g = jax.value_and_grad(loss)(params)
+        new_p, new_s, _ = opt.adamw_update(params, g, state,
+                                           opt.AdamWConfig(lr=0.1, weight_decay=0.0))
+        return new_p, new_s, {"loss": l}
+
+    params = {"w": jnp.zeros((2,))}
+    state = opt.init_opt_state(params, opt.AdamWConfig())
+    return step_fn, params, state
+
+
+def _data():
+    i = 0
+    while True:
+        yield jnp.asarray([float(i)])
+        i += 1
+
+
+def test_train_loop_runs_and_checkpoints(tmp_path):
+    step_fn, params, state = _toy_problem()
+    cfg = LoopConfig(total_steps=10, ckpt_every=5, ckpt_dir=str(tmp_path), log_every=100)
+    params, state, report = train_loop(step_fn, params, state, _data(), cfg)
+    assert report.steps_run == 10
+    assert ckpt.latest_step(tmp_path) == 10
+    assert report.last_metrics["loss"] < 5.0
+
+
+def test_train_loop_resumes_from_checkpoint(tmp_path):
+    step_fn, params, state = _toy_problem()
+    cfg = LoopConfig(total_steps=6, ckpt_every=3, ckpt_dir=str(tmp_path), log_every=100)
+    train_loop(step_fn, params, state, _data(), cfg)
+    # "restart the job" with more steps: must resume from step 6, not step 0
+    step_fn2, params0, state0 = _toy_problem()
+    cfg2 = LoopConfig(total_steps=9, ckpt_every=3, ckpt_dir=str(tmp_path), log_every=100)
+    _, _, report = train_loop(step_fn2, params0, state0, _data(), cfg2)
+    assert report.resumed_from == 6
+    assert report.steps_run == 3
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1000) * 5)
+    q, scale = compression._quantize(x)
+    err = jnp.abs(compression._dequantize(q, scale) - x)
+    assert float(err.max()) <= float(scale) * 0.5 + 1e-6

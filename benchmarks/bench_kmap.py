@@ -1,0 +1,72 @@
+"""Map-construction latency: packed single-sort engine vs the seed's
+multi-word sort/search path.
+
+The paper's Tables 3 vs 4 show mapping-operator overhead (bitmask building,
+sorting, reordering) can flip end-to-end rankings; Minuet (PAPERS.md) makes
+sort/merge mapping the central optimization target.  This suite times the
+mapping path in isolation:
+
+* single-layer kernel-map construction (submanifold K=3 and strided K=2)
+  on the deterministic CenterPoint detection scene, jitted, best-of-n;
+* the full CenterPoint map stack (5 submanifold + 4 strided maps) with the
+  cross-layer ``MapCache`` vs the legacy per-layer rebuild;
+* split-plan construction with and without the fused tile-occupancy pass.
+
+``--tiny`` runs a reduced scene for CI smoke coverage.  The ``legacy``
+engine rows exist only for this A/B and disappear when the legacy path is
+deleted (ROADMAP).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks import common
+from repro.core import kmap as km
+from repro.models import centerpoint
+
+
+def run(tiny: bool = False):
+    if tiny:
+        stx = common.det_scene(n=300, cap=512)
+        iters = 2
+    else:
+        stx = common.det_scene()
+        iters = 5
+    results = {}
+    for engine in ("legacy", "packed"):
+        fn_sub = jax.jit(lambda e=engine: km.build_kmap(stx, 3, 1, engine=e))
+        us = common.time_fn(lambda: fn_sub(), iters=iters)
+        results[f"sub/{engine}"] = us
+        common.emit(f"kmap/sub_k3/{engine}", us, "")
+
+        fn_down = jax.jit(lambda e=engine: km.build_kmap(stx, 2, 2, engine=e))
+        us = common.time_fn(lambda: fn_down(), iters=iters)
+        results[f"down/{engine}"] = us
+        common.emit(f"kmap/down_k2s2/{engine}", us, "")
+
+        fn_stack = jax.jit(lambda e=engine: centerpoint.build_maps(stx, engine=e))
+        us = common.time_fn(lambda: fn_stack(), iters=iters)
+        results[f"stack/{engine}"] = us
+        common.emit(f"kmap/centerpoint_stack/{engine}", us, "")
+
+    for name in ("sub", "down", "stack"):
+        ratio = results[f"{name}/legacy"] / max(results[f"{name}/packed"], 1e-9)
+        common.emit(f"kmap/speedup/{name}", 0.0, f"packed_vs_legacy={ratio:.2f}x")
+
+    # split-plan construction: fused occupancy vs separate pass
+    kmap = km.build_kmap(stx, 3, 1)
+    fn_sep = jax.jit(lambda: km.tile_occupancy(kmap, km.make_split_plan(kmap, 2), 128))
+    fn_fused = jax.jit(lambda: km.make_split_plan(kmap, 2, tile_m=128).occupancy)
+    common.emit("kmap/plan_occupancy/separate", common.time_fn(lambda: fn_sep(), iters=iters), "")
+    common.emit("kmap/plan_occupancy/fused", common.time_fn(lambda: fn_fused(), iters=iters), "")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced scene for CI smoke runs")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(tiny=args.tiny)

@@ -112,11 +112,21 @@ def sparse_conv_forward(x: jax.Array, w: jax.Array, kmap: KernelMap,
 
 
 def sparse_conv_dgrad(dy: jax.Array, w: jax.Array, kmap: KernelMap,
-                      cfg: DataflowConfig = DEFAULT_CONFIG) -> jax.Array:
+                      cfg: DataflowConfig = DEFAULT_CONFIG,
+                      in_capacity: Optional[int] = None) -> jax.Array:
     """Input-feature gradient: a sparse conv over the *transposed* map with
     W^T per offset — expressed weight-stationarily by swapping the pair lists
-    (so any dataflow config applies; the autotuner tunes it separately)."""
-    cap_in = int(jnp.shape(kmap.ws_in)[1])  # pair capacity == out capacity
+    (so any dataflow config applies; the autotuner tunes it separately).
+
+    ``in_capacity`` is the *input* tensor's row capacity.  The pair lists are
+    sized at the output capacity, which differs from the input capacity for
+    strided/transposed maps — callers that know the input shape (e.g. the
+    custom_vjp in sparse_conv.py) must pass it so gradients scatter into a
+    correctly-sized accumulator instead of being silently dropped."""
+    if in_capacity is not None:
+        cap_in = in_capacity
+    else:
+        cap_in = int(jnp.shape(kmap.ws_in)[1])  # submanifold: == out capacity
 
     def body(acc, inputs):
         wk, i_in, i_out = inputs

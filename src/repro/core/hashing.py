@@ -1,23 +1,302 @@
 """Coordinate hashing and sort-based lookup — int32-only, collision-free.
 
 The paper builds kernel maps with a GPU hash table.  The TPU-idiomatic (and
-JAX-native) equivalent is a *sorted binary search*: treat the (batch, x, y,
-z) coordinate columns as lexicographic sort words, sort once per map group,
-and answer each of the K^D shifted queries with a vectorized binary search
-(O(log N) gathers, fully static shapes).  PointAcc (the ASIC the paper
-compares against) makes the same observation — point-cloud mapping operators
-reduce to sort/merge primitives.
+JAX-native) equivalent is a *sorted binary search*: sort the coordinate table
+once per map group and answer all K^D shifted queries with a vectorized
+binary search (O(log N) gathers, fully static shapes).  PointAcc (the ASIC
+the paper compares against) and Minuet make the same observation —
+point-cloud mapping operators reduce to sort/merge primitives.
 
-Everything is int32 (x64 stays disabled framework-wide); no bit packing means
-no coordinate-range limits and no hash collisions.
+Packed-key engine (the fast path)
+---------------------------------
+``CoordTable`` packs each ``(batch, x, y, z)`` row into a single int32 key
+(or an ``(hi, lo)`` int32 key pair when the bit budget exceeds one word), so
+
+* table construction is **one** ``argsort`` over scalar keys (two chained
+  stable argsorts for the pair case), not one stable argsort per column;
+* every binary-search step is a **scalar** compare (pair compare at worst),
+  not a 4-word lexicographic compare;
+* all K^D shifted queries of a kernel map are answered as one flattened
+  batched lookup of shape ``(K^D · N,)``.
+
+Bit budgets are derived from the tensor's *declared* bounds by
+``key_spec_for``: ``batch_bits = ceil(log2(batch_bound))`` and, per spatial
+axis, ``ceil(log2(spatial_bound + 65)) + 1`` bits — one sign bit plus ≥64
+voxels of headroom so strided floor-grids and shifted queries stay
+representable.  Spatial fields are biased by ``2^(bits-1)`` (offset binary),
+which keeps negative coordinates sort-correct.  Tensors that declare no
+bounds (or whose bounds exceed the two-word budget) get the ``raw`` spec:
+the key words are the coordinate columns themselves — no range limits, the
+seed's multi-word contract — still driven through the batched-lookup,
+sort-free-compaction and MapCache machinery.  Packing is order-isomorphic
+to the lexicographic order on rows, so packed tables sort and deduplicate
+exactly like the multi-word path.
+
+Out-of-range *queries* (e.g. a kernel shift off the edge of the declared
+bounds, or the ``INVALID_COORD`` padding sentinel) pack to the ``MISS`` key
+(-1), which can never equal a table key; out-of-range or padded *table* rows
+pack to ``PAD`` (int32 max), which sorts last.  Everything is int32 (x64
+stays disabled framework-wide).
+
+``SortedCoords`` below is the seed's multi-word reference implementation.
+It is kept (a) as the oracle for the packed ≡ multi-word property tests and
+(b) for the temporary ``engine="legacy"`` A/B flag in ``kmap.build_kmap``;
+it is scheduled for deletion once the A/B window closes (ROADMAP).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+_I32_MAX = int(jnp.iinfo(jnp.int32).max)
+
+# Usable bits per key word.  Both words are capped at 30 bits so that no
+# valid key word can ever equal the PAD sentinel (int32 max) — with 31
+# usable bits a maximal in-field value would pack to exactly int32 max and
+# be silently treated as padding.
+_LO_BITS = 30
+_HI_BITS = 30
+
+
+@dataclasses.dataclass(frozen=True)
+class KeySpec:
+    """Static bit budget for packing (batch, *spatial) rows into int32 keys.
+
+    Field layout is MSB→LSB ``batch | x | y | z`` so integer order on keys is
+    lexicographic order on rows.  Fields never straddle the word boundary:
+    the layout pads a field up to the next word instead (wasting a few bits
+    but keeping pack/unpack to one shift+mask per field).
+
+    ``raw=True`` is the no-range-limit fallback: the key "words" are simply
+    the coordinate columns themselves (MSB-first: batch, x, y, z), valid for
+    the full int32 range — exactly the seed's multi-word table, but still
+    driven through the batched-lookup / sort-free-compaction / MapCache
+    machinery.  Used when no bounds are declared or the declared bounds
+    exceed the two-word bit budget.
+    """
+
+    batch_bits: int
+    spatial_bits: Tuple[int, ...]
+    raw: bool = False
+
+    @property
+    def ndim_space(self) -> int:
+        return len(self.spatial_bits)
+
+    def _place_fields(self):
+        """(placements LSB-first, in_budget) without raising — the budget
+        check must hold even under ``python -O`` (no assert reliance)."""
+        widths = list(self.spatial_bits)[::-1] + [self.batch_bits]  # LSB first
+        placed = []
+        cur = 0
+        ok = True
+        for w in widths:
+            ok = ok and 0 < w <= _HI_BITS
+            if cur < _LO_BITS and cur + w > _LO_BITS:
+                cur = _LO_BITS  # don't straddle the word boundary
+            word = 0 if cur < _LO_BITS else 1
+            shift = cur if word == 0 else cur - _LO_BITS
+            placed.append((word, shift, w))
+            cur += w
+            ok = ok and (word == 0 or shift + w <= _HI_BITS)
+        return placed, ok
+
+    def layout(self) -> Tuple[Tuple[int, int, int], ...]:
+        """Per field (MSB-first: batch, x, y, …): (word, shift, width).
+
+        word 0 is the low word (bit offsets 0..29), word 1 the high word
+        (offsets 30..59).  Single-word specs place everything in word 0.
+        """
+        if self.raw:
+            raise ValueError("raw specs have no packed layout")
+        placed, ok = self._place_fields()
+        if not ok:
+            raise ValueError(f"KeySpec {self} exceeds the 60-bit two-word budget")
+        # back to MSB-first (batch, x, y, z)
+        return tuple(placed[::-1])
+
+    def fits(self) -> bool:
+        """True iff the budget packs into at most two 30-bit words."""
+        return not self.raw and self._place_fields()[1]
+
+    @property
+    def words(self) -> int:
+        if self.raw:
+            return 1 + self.ndim_space
+        return 1 + max(w for w, _, _ in self.layout())
+
+    @property
+    def total_bits(self) -> int:
+        return self.batch_bits + sum(self.spatial_bits)
+
+
+def key_spec_for(ndim_space: int, batch_bound: int = 0,
+                 spatial_bound: int = 0) -> KeySpec:
+    """Derive the bit budget from a tensor's declared bounds.
+
+    ``batch_bound``: number of batches (coords in [0, batch_bound)); 0 = unknown.
+    ``spatial_bound``: max |spatial coordinate|; 0 = unknown.  Unknown or
+    too-large bounds fall back to the ``raw`` coordinate-column spec, which
+    has no range limits (and a correspondingly wider sort/compare).
+    """
+    if batch_bound <= 0 or spatial_bound <= 0:
+        return KeySpec(batch_bits=32, spatial_bits=(32,) * ndim_space, raw=True)
+    bb = max(1, math.ceil(math.log2(max(batch_bound, 2))))
+    sb = math.ceil(math.log2(spatial_bound + 65)) + 1
+    spec = KeySpec(batch_bits=bb, spatial_bits=(sb,) * ndim_space)
+    if not spec.fits():
+        return KeySpec(batch_bits=32, spatial_bits=(32,) * ndim_space, raw=True)
+    return spec
+
+
+def pack_keys(coords: jax.Array, spec: KeySpec, valid=None,
+              query: bool = False) -> jax.Array:
+    """Pack coordinate rows ``(..., 1+D)`` into int32 keys.
+
+    Returns ``(...,)`` for single-word specs, ``(..., W)`` MSB-first
+    otherwise (``[hi, lo]`` for two-word packed specs; the coordinate
+    columns themselves for ``raw`` specs).  Rows that are masked out by
+    ``valid`` or fall outside the declared per-field range become ``PAD``
+    (int32 max in every word, sorts last) — or ``MISS`` (-1 in every word,
+    matches nothing) when ``query=True``.
+    """
+    c = coords.astype(jnp.int32)
+    if spec.raw:
+        if valid is None:
+            return c
+        sentinel = jnp.int32(-1 if query else _I32_MAX)
+        return jnp.where(valid[..., None], c, sentinel)
+    layout = spec.layout()
+    words = spec.words
+    lo = jnp.zeros(c.shape[:-1], jnp.int32)
+    hi = jnp.zeros(c.shape[:-1], jnp.int32)
+    b = c[..., 0]
+    ok = (b >= 0) & (b < (1 << spec.batch_bits))
+    for f, (word, shift, width) in enumerate(layout):
+        if f == 0:
+            val = b
+        else:
+            half = 1 << (width - 1)
+            v = c[..., f]
+            ok = ok & (v >= -half) & (v < half)
+            val = v + half
+        contrib = val << shift
+        if word == 0:
+            lo = lo + contrib
+        else:
+            hi = hi + contrib
+    if valid is not None:
+        ok = ok & valid
+    sentinel = jnp.int32(-1 if query else _I32_MAX)
+    lo = jnp.where(ok, lo, sentinel)
+    if words == 1:
+        return lo
+    hi = jnp.where(ok, hi, sentinel)
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def unpack_keys(keys: jax.Array, spec: KeySpec) -> jax.Array:
+    """Inverse of ``pack_keys`` for in-range keys → ``(..., 1+D)`` int32.
+
+    Sentinel keys produce garbage rows; callers mask them via validity.
+    """
+    if spec.raw:
+        return keys
+    if spec.words == 1:
+        hi, lo = jnp.zeros_like(keys), keys
+    else:
+        hi, lo = keys[..., 0], keys[..., 1]
+    cols = []
+    for f, (word, shift, width) in enumerate(spec.layout()):
+        src = lo if word == 0 else hi
+        val = (src >> shift) & ((1 << width) - 1)
+        cols.append(val if f == 0 else val - (1 << (width - 1)))
+    return jnp.stack(cols, axis=-1)
+
+
+def keys_less(a: jax.Array, b: jax.Array, words: int = 1) -> jax.Array:
+    """a < b for packed keys (scalar when words==1, MSB-first rows else)."""
+    if words == 1:
+        return a < b
+    return _lex_less(a, b)
+
+
+def keys_equal(a: jax.Array, b: jax.Array, words: int = 1) -> jax.Array:
+    if words == 1:
+        return a == b
+    return jnp.all(a == b, axis=-1)
+
+
+def sort_keys(keys: jax.Array):
+    """Argsort packed keys.  One argsort for scalar keys; one chained stable
+    argsort per word (least-significant first) for multi-word keys.
+    Returns (order, sorted_keys)."""
+    if keys.ndim == 1:
+        order = jnp.argsort(keys, stable=True).astype(jnp.int32)
+    else:
+        order = lex_argsort(keys)
+    return order, keys[order]
+
+
+class CoordTable:
+    """Sorted packed-key coordinate table answering batched exact-match
+    queries.  Construction: pack (elementwise) + one argsort."""
+
+    def __init__(self, spec: KeySpec, sorted_keys: jax.Array, order: jax.Array):
+        self.spec = spec
+        self.sorted_keys = sorted_keys
+        self.order = order
+        self.n = sorted_keys.shape[0]
+
+    @classmethod
+    def build(cls, coords: jax.Array, valid_mask: jax.Array,
+              spec: KeySpec) -> "CoordTable":
+        keys = pack_keys(coords, spec, valid=valid_mask)
+        order, sorted_keys = sort_keys(keys)
+        return cls(spec, sorted_keys, order)
+
+    @classmethod
+    def from_sorted_keys(cls, spec: KeySpec, sorted_keys: jax.Array) -> "CoordTable":
+        """Adopt an already-sorted key array (identity order) — used when a
+        strided map's unique pass emits the next level's table for free."""
+        n = sorted_keys.shape[0]
+        return cls(spec, sorted_keys, jnp.arange(n, dtype=jnp.int32))
+
+    def lookup_keys(self, q: jax.Array) -> jax.Array:
+        """Original row index of each query key, or -1 if absent. q: (M,)
+        int32 or (M, 2) — any query count, e.g. the K^D·N flattened batch."""
+        sk = self.sorted_keys
+        w = self.spec.words
+        if w == 1:
+            pos = jnp.searchsorted(sk, q, side="left").astype(jnp.int32)
+            pos = jnp.clip(pos, 0, self.n - 1)
+            hit = sk[pos] == q
+        else:
+            m = q.shape[0]
+            lo = jnp.zeros((m,), jnp.int32)
+            hi = jnp.full((m,), self.n, jnp.int32)
+            for _ in range(max(1, math.ceil(math.log2(max(self.n, 2))) + 1)):
+                mid = (lo + hi) // 2
+                less = keys_less(sk[jnp.clip(mid, 0, self.n - 1)], q, w)
+                lo = jnp.where(less, mid + 1, lo)
+                hi = jnp.where(less, hi, mid)
+            pos = jnp.clip(lo, 0, self.n - 1)
+            hit = keys_equal(sk[pos], q, w)
+        return jnp.where(hit, self.order[pos], -1).astype(jnp.int32)
+
+    def lookup(self, query_coords: jax.Array, valid=None) -> jax.Array:
+        """Coordinate-row interface mirroring ``SortedCoords.lookup``."""
+        return self.lookup_keys(pack_keys(query_coords, self.spec,
+                                          valid=valid, query=True))
+
+
+# ---------------------------------------------------------------------------
+# Legacy multi-word path (reference oracle; engine="legacy" A/B — to delete)
+# ---------------------------------------------------------------------------
 
 def lex_argsort(words: jax.Array) -> jax.Array:
     """Stable lexicographic argsort of rows. words: (N, W) int32 → (N,) int32."""
@@ -46,7 +325,9 @@ def _lex_less(row_a, row_b):
 
 
 class SortedCoords:
-    """Sorted coordinate table answering batched exact-match queries."""
+    """Sorted coordinate table answering batched exact-match queries
+    (multi-word reference path — one stable argsort per column, 4-word
+    compares in the search loop)."""
 
     def __init__(self, coords: jax.Array, valid_mask: jax.Array):
         big = jnp.int32(jnp.iinfo(jnp.int32).max)

@@ -10,10 +10,36 @@ its own:
   — the per-offset gather/scatter lists.  Required by gather-GEMM-scatter and
   fetch-on-demand.
 
+Packed-key mapping engine (default)
+-----------------------------------
+The paper is explicit that mapping overhead (bitmask building, sorting,
+reordering) can dominate end-to-end rankings (Tables 3 vs 4).  The default
+``engine="packed"`` path therefore minimizes sort work:
+
+* the coordinate table is a ``hashing.CoordTable`` — coordinates packed into
+  scalar int32 keys, **one** argsort, scalar binary-search compares;
+* all K^D shifted queries are answered as one flattened ``(K^D·N,)`` batched
+  lookup instead of K^D independent searches;
+* the weight-stationary pair lists are compacted **sort-free** in one fused
+  segmented pass (per-offset cumsum + rank-select binary search) instead of
+  one argsort per offset;
+* strided downsampling dedupes grid cells by masking the low stride bits of
+  the *already-packed* sorted key array (power-of-two strides; one argsort),
+  and the resulting unique key array doubles as the next level's
+  ``CoordTable`` — adopted for free through the sidecar ``MapCache`` so
+  submanifold layers at the same stride never rebuild the table.
+
+``engine="legacy"`` keeps the seed's multi-word path for A/B benchmarking
+(``benchmarks/bench_kmap.py``) and for the packed ≡ legacy equivalence
+tests; it will be deleted once the A/B window closes (see ROADMAP).
+
 On top of the raw map we build the paper's redundancy-reduction machinery:
 per-output neighbor **bitmasks**, bitmask **sorting** (Fig. 6), arbitrary
 **mask splits** (Fig. 10) and per-(tile, δ) occupancy masks — the TPU analogue
-of warp-level skipping (DESIGN.md §2).
+of warp-level skipping (DESIGN.md §2).  ``make_split_plan`` slices per-split
+bitmasks out of the stored per-row bitmask with shift/mask bit ops (no
+re-scan of ``m_out``) and can emit the tile-occupancy tensor in the same
+pass (``tile_m=...``).
 
 Everything is static-shape: maps are built at the capacity of the output
 tensor and padded with -1 rows, which is precisely the paper's §3.2 padding
@@ -23,14 +49,17 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing
+from repro.core.hashing import CoordTable, KeySpec
 from repro.core.sparse_tensor import INVALID_COORD, SparseTensor
+
+_I32_MAX = int(jnp.iinfo(jnp.int32).max)
 
 
 def kernel_offsets(kernel_size: int, ndim: int) -> np.ndarray:
@@ -77,7 +106,8 @@ class KernelMap:
     ws_in: jax.Array          # (KD, cap) int32 gather indices (-1 pad)
     ws_out: jax.Array         # (KD, cap) int32 scatter indices (-1 pad)
     ws_count: jax.Array       # (KD,) int32
-    bitmask: jax.Array        # (N_out_cap,) int64 neighbor bitmask (0 pad)
+    bitmask: jax.Array        # (N_out_cap,) int32 neighbor bitmask (0 pad;
+                              # composite popcount proxy when KD > 31)
     out_stride: int = dataclasses.field(metadata=dict(static=True), default=1)
     kernel_size: int = dataclasses.field(metadata=dict(static=True), default=3)
 
@@ -90,8 +120,42 @@ class KernelMap:
         return self.m_out.shape[0]
 
 
+class MapCache:
+    """Sidecar cache of sorted ``CoordTable``s, keyed by coordinate-array
+    identity, sharing one ``KeySpec`` across an entire model.
+
+    Model map builders create one per input cloud; every ``build_kmap`` call
+    at the same stride then reuses the sorted table (submanifold + strided
+    convs over the same coordinates), and strided maps *adopt* their output
+    table into the cache so the next pyramid level's table costs zero sorts.
+    """
+
+    def __init__(self, spec: KeySpec):
+        self.spec = spec
+        self._tables: dict = {}
+
+    @classmethod
+    def for_tensor(cls, st: SparseTensor) -> "MapCache":
+        return cls(hashing.key_spec_for(st.ndim_space, st.batch_bound,
+                                        st.spatial_bound))
+
+    def table(self, st: SparseTensor) -> CoordTable:
+        key = id(st.coords)
+        ent = self._tables.get(key)
+        if ent is None:
+            t = CoordTable.build(st.coords, st.valid_mask, self.spec)
+            # hold the coords array so its id stays unique for the cache's life
+            self._tables[key] = (st.coords, t)
+            return t
+        return ent[1]
+
+    def adopt(self, coords: jax.Array, table: CoordTable) -> None:
+        self._tables.setdefault(id(coords), (coords, table))
+
+
 def _unique_coords(coords: jax.Array, valid: jax.Array, capacity: int):
-    """Sort-unique of coordinate rows; returns (coords[capacity], count)."""
+    """Sort-unique of coordinate rows; returns (coords[capacity], count).
+    (Legacy multi-word path — packed engine uses ``_unique_from_keys``.)"""
     big = jnp.int32(jnp.iinfo(jnp.int32).max)
     words = jnp.where(valid[:, None], coords.astype(jnp.int32), big)
     order = hashing.lex_argsort(words)
@@ -105,20 +169,205 @@ def _unique_coords(coords: jax.Array, valid: jax.Array, capacity: int):
     return out[:capacity], jnp.minimum(jnp.sum(is_first), capacity).astype(jnp.int32)
 
 
+def _grid_key_mask(spec: KeySpec, out_stride: int):
+    """Per-key-column AND masks (MSB-first) clearing the low
+    ``log2(out_stride)`` bits of every spatial field — turning a coordinate
+    key into its floor-grid key in one bit op.  For ``raw`` specs the
+    columns ARE the coordinates, and two's-complement masking floors
+    negatives correctly.  Returns None when the stride is not a power of two
+    or a packed field is too narrow (callers fall back to the multi-word
+    grid dedup)."""
+    if out_stride & (out_stride - 1):
+        return None
+    log2s = out_stride.bit_length() - 1
+    if log2s == 0:
+        return None
+    if spec.raw:
+        return (jnp.int32(-1),) + (jnp.int32(~(out_stride - 1)),) * spec.ndim_space
+    masks = [np.int64(2 ** 31 - 1), np.int64(2 ** 31 - 1)]
+    for f, (word, shift, width) in enumerate(spec.layout()):
+        if f == 0:
+            continue  # batch never strides
+        if log2s > width - 1:
+            return None  # bias 2^(width-1) must stay divisible by the stride
+        masks[word] &= ~(((1 << log2s) - 1) << shift) & (2 ** 32 - 1)
+    cols = [jnp.int32(int(np.int32(m))) for m in masks]
+    # MSB-first column order: single word → (lo,), pair → (hi, lo)
+    return (cols[0],) if spec.words == 1 else (cols[1], cols[0])
+
+
+def _unique_from_keys(table: CoordTable, out_stride: int, capacity: int):
+    """Floor-grid unique pass that *reuses the already-packed sorted key
+    array* of the input table.
+
+    Masks the low stride bits of ``table.sorted_keys`` (exactly the packed
+    key of each row's grid cell), argsorts the masked keys once, and
+    compacts first occurrences.  Returns ``(out_coords, n_out, child_table)``
+    where ``child_table`` is the output tensor's CoordTable for free (the
+    unique keys come out sorted).  Returns None when masking doesn't apply.
+    """
+    spec = table.spec
+    w = spec.words
+    masks = _grid_key_mask(spec, out_stride)
+    if masks is None:
+        return None
+    # PAD rows (invalid/out-of-range) are exactly the int32-max keys; keep
+    # them PAD through the masking so they still sort last.  (A raw-spec
+    # table row whose leading word legitimately equals int32 max is
+    # indistinguishable from padding — the same ambiguity the seed's
+    # multi-word table had.)
+    if w == 1:
+        row_valid = table.sorted_keys != _I32_MAX
+        masked = jnp.where(row_valid, table.sorted_keys & masks[0], _I32_MAX)
+        same = lambda ks: ks[1:] == ks[:-1]
+        pad_shape = (capacity + 1,)
+    else:
+        row_valid = table.sorted_keys[:, 0] != _I32_MAX
+        masked = jnp.where(row_valid[:, None], table.sorted_keys &
+                           jnp.stack(list(masks)), _I32_MAX)
+        same = lambda ks: hashing.keys_equal(ks[1:], ks[:-1], w)
+        pad_shape = (capacity + 1, w)
+    order, ks = hashing.sort_keys(masked)
+    first_valid = row_valid[order]
+    same_as_prev = same(ks)
+    is_first = jnp.concatenate([jnp.ones((1,), bool), ~same_as_prev]) & first_valid
+    dest = jnp.where(is_first, jnp.cumsum(is_first) - 1, capacity)
+    out_keys = jnp.full(pad_shape, _I32_MAX, jnp.int32)
+    out_keys = out_keys.at[dest].set(ks, mode="drop")[:capacity]
+    n_out = jnp.minimum(jnp.sum(is_first), capacity).astype(jnp.int32)
+    key_valid = jnp.arange(capacity) < n_out
+    out_coords = jnp.where(key_valid[:, None],
+                           hashing.unpack_keys(out_keys, spec), INVALID_COORD)
+    child = CoordTable.from_sorted_keys(spec, out_keys)
+    return out_coords, n_out, child
+
+
+def _compact_ws(m_out: jax.Array):
+    """Weight-stationary pair lists via one fused segmented pass — NO sorts.
+
+    A stable compaction is a rank-select over the per-column hit cumsum: the
+    source row of output slot ``i`` in offset column ``k`` is the first row
+    whose inclusive hit-count reaches ``i+1`` (a batched binary search over
+    a monotone array — all gathers, no scatters).  One 2-D cumsum plus one
+    vectorized searchsorted replaces the seed's K^D per-offset argsorts,
+    with identical output: hits first in row order, -1 padding after.
+    """
+    cap, kd = m_out.shape
+    hit = m_out >= 0
+    cs = jnp.cumsum(hit, axis=0, dtype=jnp.int32)  # monotone per column
+    ws_count = cs[-1]
+    slot = jnp.arange(cap, dtype=jnp.int32)
+
+    def col(c, mk, ck):
+        # rank-select: source row of output slot i = first row with cumsum i+1
+        src = jnp.searchsorted(c, slot + 1, side="left").astype(jnp.int32)
+        src = jnp.clip(src, 0, cap - 1)
+        ok = slot < ck
+        return jnp.where(ok, mk[src], -1), jnp.where(ok, src, -1)
+
+    ws_in, ws_out = jax.vmap(col, in_axes=(1, 1, 0))(cs, m_out, ws_count)
+    return ws_in, ws_out, ws_count
+
+
 def build_kmap(x: SparseTensor, kernel_size: int, stride: int = 1,
                transposed: bool = False, out_coords: Optional[jax.Array] = None,
-               n_out: Optional[jax.Array] = None, out_capacity: Optional[int] = None) -> KernelMap:
+               n_out: Optional[jax.Array] = None, out_capacity: Optional[int] = None,
+               cache: Optional[MapCache] = None, engine: str = "packed") -> KernelMap:
     """Build the kernel map for a sparse convolution over ``x``.
 
     stride == 1                 : submanifold conv, outputs = inputs.
     stride > 1, not transposed  : downsample; outputs = unique(floor-grid).
     transposed                  : upsample (inverse conv); ``out_coords`` (the
         cached finer coordinates) and ``n_out`` must be given.
+
+    ``cache``: optional ``MapCache`` — reuses the sorted coordinate table
+    across calls at the same stride and adopts strided outputs' tables.
+    ``engine``: "packed" (default, single-sort) or "legacy" (seed multi-word
+    path, kept temporarily for A/B benchmarking — scheduled for deletion).
     """
+    if engine == "legacy":
+        return _build_kmap_legacy(x, kernel_size, stride, transposed,
+                                  out_coords, n_out, out_capacity)
+    assert engine == "packed", engine
+
     d = x.ndim_space
     t = x.stride
     offs = kernel_offsets(kernel_size, d)
     kd = offs.shape[0]
+    cap_in = x.capacity
+    spec = cache.spec if cache is not None else hashing.key_spec_for(
+        d, x.batch_bound, x.spatial_bound)
+    if cache is not None:
+        table = cache.table(x)
+    else:
+        table = CoordTable.build(x.coords, x.valid_mask, spec)
+
+    child_table = None
+    if transposed:
+        assert out_coords is not None and n_out is not None
+        out_stride = t // stride
+        assert out_stride >= 1
+        n_out_cap = out_capacity or out_coords.shape[0]
+        out_coords = out_coords[:n_out_cap]
+        # neighbor input coord = out + δ * out_stride mirrored (q = p - δ·t_f)
+        delta_scale = -out_stride
+    elif stride == 1:
+        out_coords, n_out = x.coords, x.num_valid
+        out_stride = t
+        n_out_cap = out_capacity or cap_in
+        out_coords = out_coords[:n_out_cap]
+        delta_scale = t
+    else:
+        out_stride = t * stride
+        n_out_cap = out_capacity or cap_in
+        uniq = _unique_from_keys(table, out_stride, n_out_cap)
+        if uniq is not None:
+            out_coords, n_out, child_table = uniq
+        else:
+            # non-power-of-two stride (or too-narrow fields): fall back to
+            # the multi-word grid dedup — correctness over speed off the
+            # happy path
+            grid = jnp.concatenate(
+                [x.coords[:, :1],
+                 (x.coords[:, 1:] // out_stride) * out_stride], axis=1)
+            grid = jnp.where(x.valid_mask[:, None], grid, INVALID_COORD)
+            out_coords, n_out = _unique_coords(grid, x.valid_mask, n_out_cap)
+        delta_scale = t
+
+    out_valid = jnp.arange(n_out_cap) < n_out
+
+    # Output-stationary map: ONE flattened batched lookup over all K^D·N
+    # shifted queries.  Padded/out-of-range rows pack to the MISS key.
+    shifts = np.concatenate([np.zeros((kd, 1), np.int32),
+                             offs * np.int32(delta_scale)], axis=1)
+    q = out_coords[None, :, :] + jnp.asarray(shifts)[:, None, :]  # (KD, N, 1+D)
+    qkeys = hashing.pack_keys(q.reshape(kd * n_out_cap, d + 1), spec, query=True)
+    m_out = table.lookup_keys(qkeys).reshape(kd, n_out_cap).T
+    m_out = jnp.where(out_valid[:, None], m_out, -1)
+
+    # Weight-stationary lists: one fused sort-free pass for all K^D offsets.
+    ws_in, ws_out, ws_count = _compact_ws(m_out)
+
+    bm = jnp.where(out_valid, _bitmask(m_out >= 0), 0)
+
+    kmap = KernelMap(m_out=m_out, out_coords=out_coords, n_out=jnp.asarray(n_out, jnp.int32),
+                     ws_in=ws_in, ws_out=ws_out, ws_count=ws_count, bitmask=bm,
+                     out_stride=out_stride, kernel_size=kernel_size)
+    if cache is not None and child_table is not None:
+        cache.adopt(kmap.out_coords, child_table)
+    return kmap
+
+
+def _build_kmap_legacy(x: SparseTensor, kernel_size: int, stride: int = 1,
+                       transposed: bool = False, out_coords: Optional[jax.Array] = None,
+                       n_out: Optional[jax.Array] = None,
+                       out_capacity: Optional[int] = None) -> KernelMap:
+    """Seed mapping path: 4 chained argsorts for the table, K^D independent
+    4-word binary searches, one argsort per offset for the pair lists.  Kept
+    verbatim behind ``engine="legacy"`` for A/B; to be deleted."""
+    d = x.ndim_space
+    t = x.stride
+    offs = kernel_offsets(kernel_size, d)
     cap_in = x.capacity
     table = hashing.SortedCoords(x.coords, x.valid_mask)
 
@@ -128,7 +377,6 @@ def build_kmap(x: SparseTensor, kernel_size: int, stride: int = 1,
         assert out_stride >= 1
         n_out_cap = out_capacity or out_coords.shape[0]
         out_coords = out_coords[:n_out_cap]
-        # neighbor input coord = out + δ * out_stride mirrored (q = p - δ·t_f)
         delta_scale = -out_stride
     elif stride == 1:
         out_coords, n_out = x.coords, x.num_valid
@@ -148,7 +396,6 @@ def build_kmap(x: SparseTensor, kernel_size: int, stride: int = 1,
 
     out_valid = jnp.arange(n_out_cap) < n_out
 
-    # Output-stationary map: one hash query per offset (vectorized over rows).
     def query(off):
         shift = jnp.concatenate([jnp.zeros((1,), jnp.int32), off * delta_scale])
         q = out_coords + shift[None, :]
@@ -158,7 +405,6 @@ def build_kmap(x: SparseTensor, kernel_size: int, stride: int = 1,
     m_out = jax.vmap(query, in_axes=0, out_axes=1)(jnp.asarray(offs))  # (N_out_cap, KD)
     m_out = jnp.where(out_valid[:, None], m_out, -1)
 
-    # Weight-stationary lists: stable-compact valid rows of each column.
     hit = m_out >= 0  # (N_out_cap, KD)
     ws_count = jnp.sum(hit, axis=0).astype(jnp.int32)
 
@@ -215,12 +461,17 @@ class SplitPlan:
     inv_order[s]: inverse permutations (to undo the reordering on write-back).
     ranges     : static ((start, end), ...) partition of the KD offsets.
     sorted_    : False ⇒ identity order (paper's "unsorted", split=0 case).
+    occupancy  : optional (S, n_tiles, KD) per-(split, tile, δ) occupancy,
+                 fused into the plan pass when ``make_split_plan(tile_m=...)``.
+    tile_m     : static tile height the occupancy was computed for (0 = none).
     """
 
     order: jax.Array       # (S, N_out_cap) int32
     inv_order: jax.Array   # (S, N_out_cap) int32
     ranges: Tuple[Tuple[int, int], ...] = dataclasses.field(metadata=dict(static=True))
     sorted_: bool = dataclasses.field(metadata=dict(static=True), default=True)
+    occupancy: Optional[jax.Array] = None
+    tile_m: int = dataclasses.field(metadata=dict(static=True), default=0)
 
     @property
     def num_splits(self) -> int:
@@ -234,13 +485,21 @@ def split_ranges(volume: int, n_splits: int) -> Tuple[Tuple[int, int], ...]:
     return tuple((int(bounds[i]), int(bounds[i + 1])) for i in range(n_splits))
 
 
-def make_split_plan(kmap: KernelMap, n_splits: int, sort: bool = True) -> SplitPlan:
+def make_split_plan(kmap: KernelMap, n_splits: int, sort: bool = True,
+                    tile_m: Optional[int] = None) -> SplitPlan:
     """Paper Fig. 10: split the δ loop into s parts, argsort each split's
     bitmask independently and reorder rows per split.  ``n_splits=1, sort``
     reproduces SpConv v2 (Fig. 6); ``sort=False`` is the unsorted dataflow
-    (Fig. 5) the paper re-adds to the design space."""
+    (Fig. 5) the paper re-adds to the design space.
+
+    One pass over ``m_out``: per-split bitmasks are bit-sliced out of the
+    stored ``kmap.bitmask`` (exact for KD ≤ 31), and passing ``tile_m``
+    additionally emits the per-(split, tile, δ) occupancy on the already-
+    permuted hit matrix instead of a separate ``tile_occupancy`` pass.
+    """
     ranges = split_ranges(kmap.volume, n_splits)
     cap = kmap.capacity
+    kd = kmap.volume
     hit = kmap.m_out >= 0
     valid = jnp.arange(cap) < kmap.n_out
 
@@ -249,13 +508,37 @@ def make_split_plan(kmap: KernelMap, n_splits: int, sort: bool = True) -> SplitP
         if not sort:
             orders.append(jnp.arange(cap, dtype=jnp.int32))
             continue
-        bm = _bitmask(hit[:, a:b])
+        if kd <= 31:
+            bm = (kmap.bitmask >> a) & jnp.int32((1 << (b - a)) - 1)
+        else:
+            bm = _bitmask(hit[:, a:b])
         # valid rows first (sorted by bitmask), padding last
         key = jnp.where(valid, bm, jnp.iinfo(jnp.int32).max)
         orders.append(jnp.argsort(key).astype(jnp.int32))
     order = jnp.stack(orders)
     inv = jax.vmap(lambda o: jnp.argsort(o).astype(jnp.int32))(order)
-    return SplitPlan(order=order, inv_order=inv, ranges=ranges, sorted_=sort)
+
+    occ = None
+    if tile_m is not None:
+        hit_i = hit.astype(jnp.int32)
+        occ = jnp.stack([_split_occupancy(hit_i, order[s], r, tile_m)
+                         for s, r in enumerate(ranges)])
+
+    return SplitPlan(order=order, inv_order=inv, ranges=ranges, sorted_=sort,
+                     occupancy=occ, tile_m=tile_m or 0)
+
+
+def _split_occupancy(hit: jax.Array, order: jax.Array, rng: Tuple[int, int],
+                     tile_m: int) -> jax.Array:
+    """(n_tiles, KD) occupancy of one split: 1 iff any row of the permuted
+    tile has a neighbor at δ, zeroed outside the split's offset range."""
+    cap, kd = hit.shape
+    assert cap % tile_m == 0, "capacity must be padded to tile_m (paper §3.2)"
+    a, b = rng
+    h = hit[order].reshape(cap // tile_m, tile_m, kd)
+    col = jnp.arange(kd)
+    in_range = ((col >= a) & (col < b)).astype(jnp.int32)
+    return jnp.max(h, axis=1) * in_range[None, :]
 
 
 def tile_occupancy(kmap: KernelMap, plan: SplitPlan, tile_m: int) -> jax.Array:
@@ -264,20 +547,14 @@ def tile_occupancy(kmap: KernelMap, plan: SplitPlan, tile_m: int) -> jax.Array:
     skipped — the TPU analogue of warp-level zero skipping).
 
     Returns (S, n_tiles, KD) int32 (columns outside the split's range are 0).
+    Reuses the plan's fused occupancy when it was built with the same
+    ``tile_m``; otherwise recomputes.
     """
-    cap = kmap.capacity
-    assert cap % tile_m == 0, "capacity must be padded to tile_m (paper §3.2)"
-    n_tiles = cap // tile_m
+    if plan.occupancy is not None and plan.tile_m == tile_m:
+        return plan.occupancy
     hit = (kmap.m_out >= 0).astype(jnp.int32)
-
-    def per_split(order, rng):
-        a, b = rng
-        h = hit[order].reshape(n_tiles, tile_m, kmap.volume)
-        occ = jnp.max(h, axis=1)
-        col_in_range = (jnp.arange(kmap.volume) >= a) & (jnp.arange(kmap.volume) < b)
-        return occ * col_in_range[None, :].astype(jnp.int32)
-
-    return jnp.stack([per_split(plan.order[i], r) for i, r in enumerate(plan.ranges)])
+    return jnp.stack([_split_occupancy(hit, plan.order[i], r, tile_m)
+                      for i, r in enumerate(plan.ranges)])
 
 
 def redundancy_stats(kmap: KernelMap, plan: SplitPlan, tile_m: int) -> dict:

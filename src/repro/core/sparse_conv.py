@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dataflows as df
-from repro.core.kmap import KernelMap, build_kmap, transpose_kmap
+from repro.core.kmap import KernelMap, MapCache, build_kmap, transpose_kmap
 from repro.core.sparse_tensor import SparseTensor
 
 
@@ -59,7 +59,8 @@ def sparse_conv_apply(feats: jax.Array, w: jax.Array, kmap: KernelMap,
 
     def f_bwd(res, dy):
         feats_, w_ = res
-        dx = df.sparse_conv_dgrad(dy, w_, kmap, cfg.dgrad)
+        dx = df.sparse_conv_dgrad(dy, w_, kmap, cfg.dgrad,
+                                  in_capacity=feats_.shape[0])
         dw = df.sparse_conv_wgrad(feats_, dy, kmap, cfg.wgrad)
         return dx, dw
 
@@ -106,11 +107,14 @@ def apply_conv(params: dict, x: SparseTensor, kmap: KernelMap,
 
 def conv_kmap(x: SparseTensor, spec: ConvSpec,
               cached_fine: Optional[SparseTensor] = None,
-              cached_fwd: Optional[KernelMap] = None) -> KernelMap:
+              cached_fwd: Optional[KernelMap] = None,
+              cache: Optional[MapCache] = None) -> KernelMap:
     """Build (or derive) the kernel map for ``spec`` applied to ``x``.
 
-    Decoder (transposed) convs reuse the encoder's map (paper: same group)."""
+    Decoder (transposed) convs reuse the encoder's map (paper: same group).
+    ``cache`` (a ``kmap.MapCache``) lets layers at the same stride share the
+    sorted coordinate table instead of rebuilding it per layer group."""
     if spec.transposed:
         assert cached_fwd is not None and cached_fine is not None
         return transpose_kmap(cached_fwd, cached_fine)
-    return build_kmap(x, spec.kernel_size, spec.stride)
+    return build_kmap(x, spec.kernel_size, spec.stride, cache=cache)

@@ -31,12 +31,19 @@ class SparseTensor:
     feats:  (Nmax, C) — feature rows; padded rows are zero.
     num_valid: () int32 — number of real rows.
     stride: static int — the tensor stride (grows by conv stride).
+    batch_bound: static int — declared number of batches (0 = unknown).
+    spatial_bound: static int — declared max |spatial coordinate| (0 =
+        unknown).  The packed-key mapping engine (core/hashing.py) derives
+        its key bit budget from these; declaring them lets every voxel key
+        fit one int32 word so kernel-map construction is a single argsort.
     """
 
     coords: jax.Array
     feats: jax.Array
     num_valid: jax.Array
     stride: int = dataclasses.field(metadata=dict(static=True), default=1)
+    batch_bound: int = dataclasses.field(metadata=dict(static=True), default=0)
+    spatial_bound: int = dataclasses.field(metadata=dict(static=True), default=0)
 
     @property
     def capacity(self) -> int:
@@ -58,18 +65,27 @@ class SparseTensor:
         return dataclasses.replace(self, feats=feats)
 
 
-def make_sparse_tensor(coords: jax.Array, feats: jax.Array, num_valid, stride: int = 1) -> SparseTensor:
-    """Build a SparseTensor, forcing padded rows to sentinel/zero."""
+def make_sparse_tensor(coords: jax.Array, feats: jax.Array, num_valid, stride: int = 1,
+                       batch_bound: int = 0, spatial_bound: int = 0) -> SparseTensor:
+    """Build a SparseTensor, forcing padded rows to sentinel/zero.
+
+    Declared bounds are a caller promise (|spatial coord| ≤ spatial_bound,
+    0 ≤ batch < batch_bound); coordinates violating them pack to the PAD key
+    and drop out of kernel maps.  ``voxelize`` enforces the promise by
+    clamping; here the coords are taken as-is.
+    """
     n = coords.shape[0]
     mask = jnp.arange(n) < num_valid
     coords = jnp.where(mask[:, None], coords.astype(jnp.int32), INVALID_COORD)
     feats = jnp.where(mask[:, None], feats, 0)
-    return SparseTensor(coords=coords, feats=feats, num_valid=jnp.asarray(num_valid, jnp.int32), stride=stride)
+    return SparseTensor(coords=coords, feats=feats, num_valid=jnp.asarray(num_valid, jnp.int32),
+                        stride=stride, batch_bound=batch_bound, spatial_bound=spatial_bound)
 
 
-@partial(jax.jit, static_argnames=("capacity", "batch_size"))
+@partial(jax.jit, static_argnames=("capacity", "batch_size", "spatial_bound"))
 def voxelize(points: jax.Array, feats: jax.Array, voxel_size: float, capacity: int,
-             batch_idx: Optional[jax.Array] = None, batch_size: int = 1) -> SparseTensor:
+             batch_idx: Optional[jax.Array] = None, batch_size: int = 1,
+             spatial_bound: int = 0) -> SparseTensor:
     """Quantize raw points to voxel coordinates and deduplicate.
 
     points: (N, D) float — raw coordinates.
@@ -81,6 +97,12 @@ def voxelize(points: jax.Array, feats: jax.Array, voxel_size: float, capacity: i
     if batch_idx is None:
         batch_idx = jnp.zeros((n,), jnp.int32)
     q = jnp.floor(points / voxel_size).astype(jnp.int32)
+    if spatial_bound > 0:
+        # A declared bound is a promise the mapping engine packs keys by;
+        # enforce it here (range cap, as real LiDAR pipelines do) so stray
+        # points clamp to the boundary voxel instead of silently vanishing
+        # from every kernel map.
+        q = jnp.clip(q, -spatial_bound, spatial_bound)
     coords = jnp.concatenate([batch_idx[:, None].astype(jnp.int32), q], axis=1)
     #
 
@@ -100,7 +122,8 @@ def voxelize(points: jax.Array, feats: jax.Array, voxel_size: float, capacity: i
     out_feats = out_feats.at[dest].set(feats[order], mode="drop")
     num = jnp.minimum(jnp.sum(is_first), capacity)
     return SparseTensor(coords=out_coords[:capacity], feats=out_feats[:capacity],
-                        num_valid=num.astype(jnp.int32), stride=1)
+                        num_valid=num.astype(jnp.int32), stride=1,
+                        batch_bound=batch_size, spatial_bound=spatial_bound)
 
 
 def to_dense(st: SparseTensor, grid: tuple, batch_size: int) -> jax.Array:

@@ -29,9 +29,16 @@ def lidar_scene(key, n_points: int, capacity: int, channels: int,
     assign = jax.random.randint(k1, (n_obj,), 0, 32)
     objs = centers[assign] + jax.random.normal(k2, (n_obj, 3)) * jnp.array([1.5, 1.5, 0.8])
     pts = jnp.concatenate([ground, objs], axis=0)
+    # Clip to a declared region (real LiDAR pipelines crop to a range cap
+    # anyway): the declared bound lets the mapping engine pack voxel keys
+    # into one int32 word, making kernel-map construction a single argsort.
+    margin = 8.0
+    pts = jnp.clip(pts, -margin, extent + margin)
+    bound = int(np.ceil((extent + margin) / voxel)) + 2
     feats = jax.random.normal(k3, (n_points, channels))
     bidx = jax.random.randint(kb, (n_points,), 0, batch_size)
-    return voxelize(pts, feats, voxel, capacity, batch_idx=bidx, batch_size=batch_size)
+    return voxelize(pts, feats, voxel, capacity, batch_idx=bidx,
+                    batch_size=batch_size, spatial_bound=bound)
 
 
 def token_batches(seed: int, batch: int, seq: int, vocab: int) -> Iterator[dict]:

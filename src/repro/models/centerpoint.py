@@ -13,7 +13,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.kmap import build_kmap
+from repro.core.kmap import MapCache, build_kmap
 from repro.core.sparse_conv import ConvSpec, TrainDataflowConfig, apply_conv, init_conv
 from repro.core.sparse_tensor import SparseTensor
 from repro.models.minkunet import _bn_relu, _bn_relu_init
@@ -57,17 +57,25 @@ def layer_signatures(cfg: CenterPointConfig) -> Dict[str, tuple]:
     return sigs
 
 
-def build_maps(st: SparseTensor) -> dict:
-    maps = {("sub", 1): build_kmap(st, 3, 1)}
+def build_maps(st: SparseTensor, engine: str = "packed") -> dict:
+    """One ``MapCache`` across the stage ladder: the stem/submanifold and
+    strided convs at each stride share a sorted coordinate table, and each
+    downsample adopts its output table for the next stage.
+
+    ``engine="legacy"`` rebuilds every table per layer with the seed path —
+    only for the benchmark A/B (benchmarks/bench_kmap.py); goes away with
+    the legacy engine."""
+    cache = MapCache.for_tensor(st) if engine == "packed" else None
+    maps = {("sub", 1): build_kmap(st, 3, 1, cache=cache, engine=engine)}
     cur, stride = st, 1
     for i in range(4):
-        kd = build_kmap(cur, 2, 2)
+        kd = build_kmap(cur, 2, 2, cache=cache, engine=engine)
         maps[("down", stride)] = kd
         cur = SparseTensor(coords=kd.out_coords,
                            feats=jnp.zeros((kd.capacity, 1), st.feats.dtype),
                            num_valid=kd.n_out, stride=kd.out_stride)
         stride *= 2
-        maps[("sub", stride)] = build_kmap(cur, 3, 1)
+        maps[("sub", stride)] = build_kmap(cur, 3, 1, cache=cache, engine=engine)
     return maps
 
 

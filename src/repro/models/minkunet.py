@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dataflows as df
-from repro.core.kmap import KernelMap, build_kmap, transpose_kmap
+from repro.core.kmap import KernelMap, MapCache, build_kmap, transpose_kmap
 from repro.core.sparse_conv import (ConvSpec, TrainDataflowConfig, apply_conv,
                                     init_conv)
 from repro.core.sparse_tensor import SparseTensor
@@ -112,20 +112,25 @@ def layer_signatures(cfg: MinkUNetConfig) -> Dict[str, tuple]:
 
 
 def build_maps(st: SparseTensor) -> dict:
-    """Build every kernel map once (maps are shared within groups)."""
+    """Build every kernel map once (maps are shared within groups).
+
+    A single ``MapCache`` spans the whole pyramid: the submanifold and
+    strided convs at each level share one sorted coordinate table, and each
+    downsample's unique pass emits the next level's table for free."""
+    cache = MapCache.for_tensor(st)
     maps = {}
     cur = st
-    maps[("sub", 1)] = build_kmap(cur, 3, 1)
+    maps[("sub", 1)] = build_kmap(cur, 3, 1, cache=cache)
     tensors = {1: cur}
     stride = 1
     for i in range(4):
-        kd = build_kmap(cur, 2, 2)
+        kd = build_kmap(cur, 2, 2, cache=cache)
         maps[("down", stride)] = kd
         cur = SparseTensor(coords=kd.out_coords, feats=jnp.zeros(
             (kd.capacity, 1), st.feats.dtype), num_valid=kd.n_out, stride=kd.out_stride)
         stride *= 2
         tensors[stride] = cur
-        maps[("sub", stride)] = build_kmap(cur, 3, 1)
+        maps[("sub", stride)] = build_kmap(cur, 3, 1, cache=cache)
     for lvl in range(3, -1, -1):
         s = 2 ** lvl
         maps[("up", s)] = transpose_kmap(maps[("down", s)], tensors[s])

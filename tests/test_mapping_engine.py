@@ -1,0 +1,311 @@
+"""Packed-key mapping engine: equivalence with the legacy multi-word path,
+cross-layer table caching, dgrad capacity, and bitmask dtype invariants.
+
+Property tests use ``hypothesis`` when installed (requirements-dev.txt) and
+fall back to a deterministic sample otherwise (``conftest.property_test``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import property_test
+
+from repro.core import dataflows as df
+from repro.core import hashing
+from repro.core import kmap as km
+from repro.core.sparse_conv import sparse_conv_apply
+from repro.core.sparse_tensor import SparseTensor, make_sparse_tensor
+
+KMAP_FIELDS = ("m_out", "out_coords", "n_out", "ws_in", "ws_out", "ws_count",
+               "bitmask")
+
+
+def random_tensor(seed, n=100, cap=128, channels=8, extent=8, batch=1, d=3,
+                  lo=0, bounds=False):
+    """Random unique voxel cloud; ``lo < 0`` exercises negative coordinates,
+    ``batch > 1`` duplicate spatial coords across batches."""
+    rng = np.random.default_rng(seed)
+    coords = rng.integers(lo, extent, size=(n, d))
+    b = rng.integers(0, batch, size=(n, 1))
+    coords = np.unique(np.concatenate([b, coords], axis=1), axis=0)
+    n = coords.shape[0]
+    feats = rng.standard_normal((cap, channels)).astype(np.float32)
+    pad = np.zeros((cap - n, d + 1), np.int32)
+    kw = dict(batch_bound=batch, spatial_bound=max(abs(lo), extent)) if bounds else {}
+    return make_sparse_tensor(jnp.asarray(np.concatenate([coords, pad])),
+                              jnp.asarray(feats), n, **kw)
+
+
+def assert_kmaps_equal(a: km.KernelMap, b: km.KernelMap):
+    for f in KMAP_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Packed lookup ≡ multi-word lookup
+# ---------------------------------------------------------------------------
+
+def _spec_of_kind(kind, batch, lo, extent):
+    """One spec per engine mode: single int32 word, packed [hi, lo] pair,
+    and the raw no-range-limit fallback (default when bounds are unknown)."""
+    if kind == "one":
+        spec = hashing.key_spec_for(3, batch_bound=batch,
+                                    spatial_bound=max(abs(lo), extent))
+        assert spec.words == 1 and not spec.raw
+    elif kind == "two":
+        spec = hashing.key_spec_for(3, batch_bound=500, spatial_bound=12000)
+        assert spec.words == 2 and not spec.raw
+    else:
+        spec = hashing.key_spec_for(3)  # unknown bounds → raw columns
+        assert spec.raw and spec.words == 4
+    return spec
+
+
+@property_test(
+    "seed,extent,lo,batch,spec_kind",
+    cases=[(0, 8, 0, 1, "one"), (1, 16, -8, 1, "one"), (2, 6, -5, 3, "one"),
+           (3, 20, 0, 2, "two"), (4, 10, -12, 4, "two"), (5, 3, -2, 1, "two"),
+           (6, 18, -9, 3, "raw"), (7, 5, 0, 1, "raw"), (8, 12, -12, 4, "raw")],
+    strategies=lambda st: dict(seed=st.integers(0, 10_000),
+                               extent=st.integers(3, 20),
+                               lo=st.integers(-12, 0),
+                               batch=st.integers(1, 4),
+                               spec_kind=st.sampled_from(["one", "two", "raw"])),
+    max_examples=24)
+def test_property_packed_lookup_matches_multiword(seed, extent, lo, batch,
+                                                  spec_kind):
+    stx = random_tensor(seed, n=80, cap=96, extent=extent, lo=lo, batch=batch)
+    spec = _spec_of_kind(spec_kind, batch, lo, extent)
+    legacy = hashing.SortedCoords(stx.coords, stx.valid_mask)
+    packed = hashing.CoordTable.build(stx.coords, stx.valid_mask, spec)
+    rng = np.random.default_rng(seed + 1)
+    # half perturbed copies of table rows (some present), half random
+    q1 = np.asarray(stx.coords)[rng.integers(0, stx.capacity, 64)]
+    q1 = q1 + rng.integers(-1, 2, size=q1.shape)
+    q2 = np.concatenate([rng.integers(0, batch, (64, 1)),
+                         rng.integers(lo - 2, extent + 2, (64, 3))], axis=1)
+    q = jnp.asarray(np.concatenate([q1, q2]).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(legacy.lookup(q)),
+                                  np.asarray(packed.lookup(q)))
+
+
+def test_pack_unpack_roundtrip_with_negatives():
+    spec = hashing.key_spec_for(3, batch_bound=4, spatial_bound=30)
+    rng = np.random.default_rng(0)
+    coords = np.concatenate([rng.integers(0, 4, (200, 1)),
+                             rng.integers(-30, 31, (200, 3))], axis=1)
+    keys = hashing.pack_keys(jnp.asarray(coords, jnp.int32), spec)
+    back = hashing.unpack_keys(keys, spec)
+    np.testing.assert_array_equal(np.asarray(back), coords)
+    # packing is order-isomorphic to lexicographic row order
+    order_packed = np.asarray(hashing.sort_keys(keys)[0])
+    order_lex = np.asarray(hashing.lex_argsort(jnp.asarray(coords, jnp.int32)))
+    np.testing.assert_array_equal(np.lexsort(coords.T[::-1]), order_lex)
+    np.testing.assert_array_equal(coords[order_packed], coords[order_lex])
+
+
+def test_undeclared_bounds_have_no_range_limit():
+    """Regression: a coordinate far outside any packed bit budget, on a
+    tensor with NO declared bounds, must still appear in the kernel map
+    (the raw-spec fallback keeps the seed's no-range-limit contract)."""
+    coords = np.zeros((8, 4), np.int32)
+    coords[:, 1] = np.arange(8) * 20000          # |x| up to 140000
+    coords[:, 2] = -70000 + np.arange(8) * 100
+    stx = make_sparse_tensor(jnp.asarray(coords), jnp.ones((8, 4)), 8)
+    assert stx.spatial_bound == 0  # nothing declared
+    for kernel, stride in [(3, 1), (2, 2)]:
+        assert_kmaps_equal(km.build_kmap(stx, kernel, stride),
+                           km.build_kmap(stx, kernel, stride, engine="legacy"))
+    # self-hit at the center offset for every valid row
+    m = np.asarray(km.build_kmap(stx, 3, 1).m_out)
+    np.testing.assert_array_equal(m[:8, 0], np.arange(8))
+
+
+def test_huge_declared_bounds_fall_back_instead_of_crashing():
+    spec = hashing.key_spec_for(3, batch_bound=2, spatial_bound=20000)
+    assert spec.raw  # too wide for two words → raw, not an AssertionError
+    stx = make_sparse_tensor(
+        jnp.asarray([[0, 20000, -20000, 3], [1, 5, 5, 5]], jnp.int32),
+        jnp.ones((2, 4)), 2, batch_bound=2, spatial_bound=20000)
+    assert_kmaps_equal(km.build_kmap(stx, 2, 2),
+                       km.build_kmap(stx, 2, 2, engine="legacy"))
+
+
+def test_no_valid_key_aliases_pad_sentinel():
+    """Regression: a 31-bit single-word layout would pack the maximal
+    in-field row to exactly int32 max (the PAD sentinel), silently dropping
+    it from strided dedup.  Word budgets are capped at 30 bits, so this spec
+    must spill to two words and the row must survive a downsample."""
+    spec = hashing.key_spec_for(3, batch_bound=2, spatial_bound=447)
+    assert spec.total_bits == 31 and spec.words == 2
+    coords = jnp.asarray([[1, 511, 511, 511], [0, 0, 0, 0]], jnp.int32)
+    keys = hashing.pack_keys(coords, spec, valid=jnp.ones((2,), bool))
+    assert (np.asarray(keys) != np.iinfo(np.int32).max).any(axis=-1).all()
+    table = hashing.CoordTable.build(coords, jnp.ones((2,), bool), spec)
+    np.testing.assert_array_equal(np.asarray(table.lookup(coords)), [0, 1])
+    uniq = km._unique_from_keys(table, 2, 2)
+    assert uniq is not None and int(uniq[1]) == 2
+
+
+def test_out_of_range_queries_miss():
+    spec = hashing.key_spec_for(3, batch_bound=1, spatial_bound=10)
+    stx = random_tensor(0, extent=8)
+    table = hashing.CoordTable.build(stx.coords, stx.valid_mask, spec)
+    q = jnp.asarray([[0, 1000, 0, 0], [0, 0, -1000, 0], [2, 0, 0, 0],
+                     [0, 0x3FFFFFF, 0x3FFFFFF, 0x3FFFFFF]], jnp.int32)
+    assert (np.asarray(table.lookup(q)) == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# build_kmap: packed ≡ legacy, with and without the MapCache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("kernel,stride", [(3, 1), (2, 2), (3, 2)])
+@pytest.mark.parametrize("bounds", [False, True])
+def test_build_kmap_matches_legacy(seed, kernel, stride, bounds):
+    stx = random_tensor(seed, extent=16, lo=-4, batch=2, bounds=bounds)
+    a = km.build_kmap(stx, kernel, stride, engine="legacy")
+    b = km.build_kmap(stx, kernel, stride, engine="packed")
+    assert_kmaps_equal(a, b)
+
+
+def test_cached_table_reuse_and_adoption():
+    stx = random_tensor(3, extent=16, bounds=True)
+    cache = km.MapCache.for_tensor(stx)
+    sub = km.build_kmap(stx, 3, 1, cache=cache)
+    down = km.build_kmap(stx, 2, 2, cache=cache)
+    assert_kmaps_equal(sub, km.build_kmap(stx, 3, 1, engine="legacy"))
+    assert_kmaps_equal(down, km.build_kmap(stx, 2, 2, engine="legacy"))
+    # the downsample adopted its output table: the child submanifold map
+    # must come out identical to a from-scratch build
+    cur = SparseTensor(coords=down.out_coords,
+                       feats=jnp.zeros((down.capacity, 1)),
+                       num_valid=down.n_out, stride=down.out_stride)
+    child = km.build_kmap(cur, 3, 1, cache=cache)
+    assert_kmaps_equal(child, km.build_kmap(cur, 3, 1, engine="legacy"))
+    # exactly two tables live in the cache: stx's and the adopted child's
+    assert len(cache._tables) == 2
+
+
+def test_transpose_kmap_equivalent_under_cached_table():
+    stx = random_tensor(4, extent=16, bounds=True)
+    cache = km.MapCache.for_tensor(stx)
+    fwd_cached = km.build_kmap(stx, 2, 2, cache=cache)
+    fwd_legacy = km.build_kmap(stx, 2, 2, engine="legacy")
+    assert_kmaps_equal(km.transpose_kmap(fwd_cached, stx),
+                       km.transpose_kmap(fwd_legacy, stx))
+
+
+def test_build_kmap_inside_jit_with_cache():
+    stx = random_tensor(5, extent=16, bounds=True)
+
+    @jax.jit
+    def build():
+        cache = km.MapCache.for_tensor(stx)
+        a = km.build_kmap(stx, 3, 1, cache=cache)
+        b = km.build_kmap(stx, 2, 2, cache=cache)
+        return a, b
+
+    a, b = build()
+    assert_kmaps_equal(a, km.build_kmap(stx, 3, 1, engine="legacy"))
+    assert_kmaps_equal(b, km.build_kmap(stx, 2, 2, engine="legacy"))
+
+
+# ---------------------------------------------------------------------------
+# All dataflows bit-identical on packed-engine maps vs seed maps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel,stride", [(3, 1), (2, 2)])
+def test_dataflows_bit_identical_on_new_maps(kernel, stride):
+    stx = random_tensor(6, n=60, cap=64, channels=4, extent=10)
+    new = km.build_kmap(stx, kernel, stride, engine="packed")
+    old = km.build_kmap(stx, kernel, stride, engine="legacy")
+    kd = kernel ** 3
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (kd, 4, 8)) * 0.3
+    dy = jax.random.normal(key, (new.capacity, 8))
+    for flow in df.DATAFLOWS:
+        cfg = df.DataflowConfig(flow)
+        y_new = df.sparse_conv_forward(stx.feats, w, new, cfg)
+        y_old = df.sparse_conv_forward(stx.feats, w, old, cfg)
+        np.testing.assert_array_equal(np.asarray(y_new), np.asarray(y_old))
+        dx_new = df.sparse_conv_dgrad(dy, w, new, cfg, in_capacity=stx.capacity)
+        dx_old = df.sparse_conv_dgrad(dy, w, old, cfg, in_capacity=stx.capacity)
+        np.testing.assert_array_equal(np.asarray(dx_new), np.asarray(dx_old))
+        dw_new = df.sparse_conv_wgrad(stx.feats, dy, new, cfg)
+        dw_old = df.sparse_conv_wgrad(stx.feats, dy, old, cfg)
+        np.testing.assert_array_equal(np.asarray(dw_new), np.asarray(dw_old))
+
+
+# ---------------------------------------------------------------------------
+# dgrad accumulator capacity (regression: out_capacity != cap_in)
+# ---------------------------------------------------------------------------
+
+def test_dgrad_respects_input_capacity():
+    stx = random_tensor(7, n=100, cap=128, channels=4, extent=16)
+    out_cap = 64
+    kmap = km.build_kmap(stx, 2, 2, out_capacity=out_cap)
+    assert kmap.capacity == out_cap != stx.capacity
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 4, 6)) * 0.3
+    dy = jax.random.normal(jax.random.PRNGKey(2), (out_cap, 6))
+    dx = df.sparse_conv_dgrad(dy, w, kmap, in_capacity=stx.capacity)
+    assert dx.shape == (stx.capacity, 4)
+    # brute-force pair-list reference
+    ws_in, ws_out = np.asarray(kmap.ws_in), np.asarray(kmap.ws_out)
+    ref = np.zeros((stx.capacity, 4), np.float32)
+    wn, dyn = np.asarray(w), np.asarray(dy)
+    for k in range(kmap.volume):
+        for i_in, i_out in zip(ws_in[k], ws_out[k]):
+            if i_in >= 0:
+                ref[i_in] += dyn[i_out] @ wn[k].T
+    np.testing.assert_allclose(np.asarray(dx), ref, rtol=1e-5, atol=1e-5)
+    # input rows beyond the pair capacity must receive gradient too
+    assert (np.abs(ref[out_cap:]).sum() > 0), "regression scene too small"
+
+
+def test_custom_vjp_dgrad_shape_with_mismatched_capacities():
+    stx = random_tensor(8, n=100, cap=128, channels=4, extent=16)
+    kmap = km.build_kmap(stx, 2, 2, out_capacity=64)
+    w = jax.random.normal(jax.random.PRNGKey(3), (8, 4, 6)) * 0.3
+
+    def loss(feats, w):
+        return jnp.sum(sparse_conv_apply(feats, w, kmap) ** 2)
+
+    dx, dw = jax.grad(loss, argnums=(0, 1))(stx.feats, w)
+    assert dx.shape == stx.feats.shape
+    assert dw.shape == w.shape
+    assert float(jnp.abs(dx[64:]).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# bitmask dtype + composite path (K^D > 31)
+# ---------------------------------------------------------------------------
+
+def test_bitmask_is_int32_exact_below_32():
+    stx = random_tensor(9)
+    kmap = km.build_kmap(stx, 3, 1)
+    assert kmap.bitmask.dtype == jnp.int32
+    m = np.asarray(kmap.m_out)
+    bm = np.asarray(kmap.bitmask)
+    for i in range(int(stx.num_valid)):
+        assert bm[i] == sum(1 << k for k in range(27) if m[i, k] >= 0)
+
+
+def test_bitmask_composite_path_above_31():
+    rng = np.random.default_rng(0)
+    hit = jnp.asarray(rng.integers(0, 2, size=(50, 64)).astype(bool))
+    bm = km._bitmask(hit)
+    assert bm.dtype == jnp.int32
+    h = np.asarray(hit)
+    pop = h.sum(axis=1).astype(np.int64)
+    low = (h[:, :24] * (1 << np.arange(24))).sum(axis=1).astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(bm), (pop << 24) | low)
+    # K=4 (even) in 3D has volume 64 → exercises the composite path end-to-end
+    stx = random_tensor(10, extent=16)
+    kmap = km.build_kmap(stx, 4, 2)
+    assert kmap.volume == 64
+    assert kmap.bitmask.dtype == jnp.int32
+    assert_kmaps_equal(kmap, km.build_kmap(stx, 4, 2, engine="legacy"))

@@ -1,0 +1,74 @@
+"""Serving-engine throughput/latency: bucketed batching + map reuse.
+
+The production question behind the ROADMAP north star: what does the sparse
+stack sustain under mixed-size request traffic?  For each arch
+(MinkUNet-KITTI segmentation, CenterPoint-Waymo detection) this suite
+drives the same synthetic stream through:
+
+* ``batched``   — the serving engine with its bucket ladder (warm, jitted);
+* ``unbatched`` — the same engine restricted to one scene per batch
+  (the "per-request forward" a naive deployment does);
+* ``repeat``    — the stream replayed through the warm engine: identical
+  packed batches hit the cross-request map cache, so the second epoch skips
+  kernel-map construction entirely (hit rate in the derived column).
+
+Emits scenes/s and p50/p95 per-scene latency.  ``--tiny`` shrinks the
+stream and ladder for CI smoke coverage.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+from repro.serve.bucketing import BucketLadder
+from repro.serve.engine import ARCHS, Engine, EngineStats
+from repro.serve.workload import lidar_stream
+
+
+def _drive(arch: str, scenes, bound: int, ladder: BucketLadder,
+           flush_every: int, tag: str, epochs: int = 1):
+    eng = Engine(arch, ladder=ladder, spatial_bound=bound)
+    eng.warmup()
+    eng.stats = EngineStats()   # steady state only: warmup compiles excluded,
+    for _ in range(epochs):     # so recompiles should stay 0
+        eng.serve(scenes, flush_every=flush_every)
+    s = eng.stats.summary()
+    mc = s["map_cache"]
+    hit_rate = mc["hits"] / max(mc["hits"] + mc["misses"], 1)
+    derived = (f"scenes_per_s={s['scenes_per_s']:.2f};p95_ms={s['p95_ms']:.1f};"
+               f"recompiles={sum(s['recompiles'].values())};"
+               f"map_hit_rate={hit_rate:.2f}")
+    common.emit(f"serving/{arch}/{tag}/p50", s["p50_ms"] * 1e3, derived)
+    return s
+
+
+def run(tiny: bool = False):
+    if tiny:
+        count, n_range, ladder = 6, (80, 400), BucketLadder((256, 512), max_batch=3)
+        flush_every = 3
+    else:
+        count, n_range = 24, (200, 1200)
+        ladder = BucketLadder((512, 1024, 2048), max_batch=4)
+        flush_every = 8
+
+    for arch in sorted(ARCHS):
+        channels = ARCHS[arch].in_channels_of(ARCHS[arch].default_config)
+        scenes, bound = lidar_stream(0, count, channels, n_range=n_range)
+        batched = _drive(arch, scenes, bound, ladder, flush_every, "batched")
+        single = BucketLadder(ladder.capacities, max_batch=1)
+        unbatched = _drive(arch, scenes, bound, single, 1, "unbatched")
+        speedup = (batched["scenes_per_s"] /
+                   max(unbatched["scenes_per_s"], 1e-9))
+        common.emit(f"serving/{arch}/batched_vs_unbatched", 0.0,
+                    f"throughput_ratio={speedup:.2f}x")
+
+        _drive(arch, scenes, bound, ladder, flush_every, "repeat", epochs=2)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced stream for CI smoke runs")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(tiny=args.tiny)

@@ -18,11 +18,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_generator, bench_graph, bench_hybrid,
-                            bench_inference, bench_kmap, bench_sorted,
-                            bench_splits, bench_training, common)
+                            bench_inference, bench_kmap, bench_serving,
+                            bench_sorted, bench_splits, bench_training, common)
 
     suites = [
         ("kmap_engine", bench_kmap.run),
+        ("serving_engine", bench_serving.run),
         ("fig14_inference", bench_inference.run),
         ("fig15_training", bench_training.run),
         ("tab34_sorted", bench_sorted.run),

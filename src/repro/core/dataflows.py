@@ -55,6 +55,19 @@ class DataflowConfig:
     def effective_splits(self) -> int:
         return max(1, self.n_splits)
 
+    def to_dict(self) -> dict:
+        """JSON-safe dict (all fields are ints/strs).  Round-trips through
+        ``from_dict`` — the serving engine's PlanRegistry persists tuned
+        assignments with this."""
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "DataflowConfig":
+        unknown = set(d) - {f.name for f in dataclasses.fields(DataflowConfig)}
+        if unknown:
+            raise ValueError(f"unknown DataflowConfig fields: {sorted(unknown)}")
+        return DataflowConfig(**d)
+
 
 DEFAULT_CONFIG = DataflowConfig()
 

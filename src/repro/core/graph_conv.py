@@ -27,7 +27,12 @@ def edges_to_kmap(src: jax.Array, dst: jax.Array, edge_type: jax.Array,
 
     src/dst/edge_type: (E_cap,) int32 with -1 padding.
     Returns a KernelMap whose ws_* lists drive the shared dataflow engine
-    (m_out/bitmask are degenerate placeholders — implicit GEMM is N/A)."""
+    (m_out/bitmask are degenerate placeholders — implicit GEMM is N/A).
+
+    Note on declared bounds: graph workloads index nodes by integer id
+    directly — no coordinate table is ever built, so the packed-key engine's
+    ``batch_bound``/``spatial_bound`` declarations don't apply here (there
+    is nothing to sort or binary-search; the edge list IS the map)."""
     rel = jnp.arange(num_relations)
 
     def per_rel(r):

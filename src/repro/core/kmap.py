@@ -122,35 +122,56 @@ class KernelMap:
 
 class MapCache:
     """Sidecar cache of sorted ``CoordTable``s, keyed by coordinate-array
-    identity, sharing one ``KeySpec`` across an entire model.
+    identity (or a caller-supplied content key), sharing one ``KeySpec``
+    across an entire model.
 
     Model map builders create one per input cloud; every ``build_kmap`` call
     at the same stride then reuses the sorted table (submanifold + strided
     convs over the same coordinates), and strided maps *adopt* their output
     table into the cache so the next pyramid level's table costs zero sorts.
+
+    Serving hook: ``key=`` lets a caller that knows two coordinate arrays
+    hold identical *content* (e.g. the serving engine, which digests packed
+    request batches) share tables across distinct array objects — the
+    cross-request analogue of the cross-layer reuse above.  ``hits``/
+    ``misses`` counters and ``clear()`` expose cache behaviour to engine
+    stats and tests.  A MapCache must not be reused across separate ``jit``
+    traces (cached tables would leak tracers): create one per trace, or use
+    it only eagerly.
     """
 
     def __init__(self, spec: KeySpec):
         self.spec = spec
         self._tables: dict = {}
+        self.hits = 0
+        self.misses = 0
 
     @classmethod
     def for_tensor(cls, st: SparseTensor) -> "MapCache":
         return cls(hashing.key_spec_for(st.ndim_space, st.batch_bound,
                                         st.spatial_bound))
 
-    def table(self, st: SparseTensor) -> CoordTable:
-        key = id(st.coords)
+    def table(self, st: SparseTensor, key=None) -> CoordTable:
+        key = id(st.coords) if key is None else key
         ent = self._tables.get(key)
         if ent is None:
+            self.misses += 1
             t = CoordTable.build(st.coords, st.valid_mask, self.spec)
             # hold the coords array so its id stays unique for the cache's life
             self._tables[key] = (st.coords, t)
             return t
+        self.hits += 1
         return ent[1]
 
-    def adopt(self, coords: jax.Array, table: CoordTable) -> None:
-        self._tables.setdefault(id(coords), (coords, table))
+    def adopt(self, coords: jax.Array, table: CoordTable, key=None) -> None:
+        self._tables.setdefault(id(coords) if key is None else key,
+                                (coords, table))
+
+    def clear(self) -> None:
+        self._tables.clear()
+
+    def __len__(self) -> int:
+        return len(self._tables)
 
 
 def _unique_coords(coords: jax.Array, valid: jax.Array, capacity: int):

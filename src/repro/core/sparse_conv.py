@@ -42,6 +42,16 @@ class TrainDataflowConfig:
         """Sparse-mapping oriented (high-parallelism devices)."""
         return TrainDataflowConfig(fwd, cfg, cfg)
 
+    def to_dict(self) -> dict:
+        return {"fwd": self.fwd.to_dict(), "dgrad": self.dgrad.to_dict(),
+                "wgrad": self.wgrad.to_dict()}
+
+    @staticmethod
+    def from_dict(d: dict) -> "TrainDataflowConfig":
+        return TrainDataflowConfig(fwd=df.DataflowConfig.from_dict(d["fwd"]),
+                                   dgrad=df.DataflowConfig.from_dict(d["dgrad"]),
+                                   wgrad=df.DataflowConfig.from_dict(d["wgrad"]))
+
 
 DEFAULT_TRAIN_CONFIG = TrainDataflowConfig()
 
@@ -101,8 +111,12 @@ def apply_conv(params: dict, x: SparseTensor, kmap: KernelMap,
         y = y + params["b"][None, :]
     valid = jnp.arange(kmap.capacity) < kmap.n_out
     y = jnp.where(valid[:, None], y, 0)
+    # Output coordinates live in the same declared (batch, spatial) region as
+    # the input's: propagate the bounds so downstream build_kmap calls stay on
+    # the single-word packed-key path instead of falling back to raw keys.
     return SparseTensor(coords=kmap.out_coords, feats=y, num_valid=kmap.n_out,
-                        stride=kmap.out_stride)
+                        stride=kmap.out_stride, batch_bound=x.batch_bound,
+                        spatial_bound=x.spatial_bound)
 
 
 def conv_kmap(x: SparseTensor, spec: ConvSpec,

@@ -57,15 +57,19 @@ def layer_signatures(cfg: CenterPointConfig) -> Dict[str, tuple]:
     return sigs
 
 
-def build_maps(st: SparseTensor, engine: str = "packed") -> dict:
+def build_maps(st: SparseTensor, engine: str = "packed",
+               cache: Optional[MapCache] = None) -> dict:
     """One ``MapCache`` across the stage ladder: the stem/submanifold and
     strided convs at each stride share a sorted coordinate table, and each
-    downsample adopts its output table for the next stage.
+    downsample adopts its output table for the next stage.  A prebuilt warm
+    ``cache`` may be passed (serving engine); never reuse one across ``jit``
+    traces.
 
     ``engine="legacy"`` rebuilds every table per layer with the seed path —
     only for the benchmark A/B (benchmarks/bench_kmap.py); goes away with
     the legacy engine."""
-    cache = MapCache.for_tensor(st) if engine == "packed" else None
+    if cache is None:
+        cache = MapCache.for_tensor(st) if engine == "packed" else None
     maps = {("sub", 1): build_kmap(st, 3, 1, cache=cache, engine=engine)}
     cur, stride = st, 1
     for i in range(4):
@@ -73,7 +77,8 @@ def build_maps(st: SparseTensor, engine: str = "packed") -> dict:
         maps[("down", stride)] = kd
         cur = SparseTensor(coords=kd.out_coords,
                            feats=jnp.zeros((kd.capacity, 1), st.feats.dtype),
-                           num_valid=kd.n_out, stride=kd.out_stride)
+                           num_valid=kd.n_out, stride=kd.out_stride,
+                           batch_bound=st.batch_bound, spatial_bound=st.spatial_bound)
         stride *= 2
         maps[("sub", stride)] = build_kmap(cur, 3, 1, cache=cache, engine=engine)
     return maps
@@ -81,7 +86,8 @@ def build_maps(st: SparseTensor, engine: str = "packed") -> dict:
 
 def apply(params, st: SparseTensor, cfg: CenterPointConfig,
           maps: Optional[dict] = None,
-          assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None) -> jax.Array:
+          assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None,
+          bn_mode: str = "batch") -> jax.Array:
     maps = maps or build_maps(st)
     assignment = assignment or {}
 
@@ -89,13 +95,13 @@ def apply(params, st: SparseTensor, cfg: CenterPointConfig,
         return assignment.get(sig, TrainDataflowConfig())
 
     x = apply_conv(params["stem"], st, maps[("sub", 1)], cfg_for((1, 3, "sub")))
-    x = _bn_relu(params["stem_bn"], x)
+    x = _bn_relu(params["stem_bn"], x, mode=bn_mode)
     stride = 1
     for i in range(len(cfg.channels)):
         x = apply_conv(params[f"down{i}"], x, maps[("down", stride)], cfg_for((stride, 2, "down")))
-        x = _bn_relu(params[f"down{i}_bn"], x)
+        x = _bn_relu(params[f"down{i}_bn"], x, mode=bn_mode)
         stride *= 2
         for b in range(cfg.sub_convs_per_stage):
             x = apply_conv(params[f"sub{i}_{b}"], x, maps[("sub", stride)], cfg_for((stride, 3, "sub")))
-            x = _bn_relu(params[f"sub{i}_{b}_bn"], x)
+            x = _bn_relu(params[f"sub{i}_{b}_bn"], x, mode=bn_mode)
     return x.feats

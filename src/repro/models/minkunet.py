@@ -41,14 +41,32 @@ def _bn_relu_init(c: int):
     return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
 
 
-def _bn_relu(p, st: SparseTensor, relu: bool = True) -> SparseTensor:
-    """Masked batch norm (stats over valid rows) + ReLU."""
+def _bn_relu(p, st: SparseTensor, relu: bool = True,
+             mode: str = "batch") -> SparseTensor:
+    """Masked batch norm (stats over valid rows) + ReLU.
+
+    ``mode="batch"`` (training/eval parity with the seed) normalizes with
+    statistics over all valid rows — which couples every row in a *batched*
+    tensor.  ``mode="affine"`` is the serving/inference mode: a per-channel
+    scale+bias only, so each row's output depends on that row alone and a
+    capacity-bucketed batched forward is bit-identical to the per-scene
+    forward (the serving engine's correctness contract).  It implements the
+    standard deploy-time convention of *folding* BN into an affine op: a
+    checkpoint exported for serving is expected to carry running statistics
+    pre-folded into ``scale``/``bias`` (this repo trains with batch stats
+    and keeps no running stats, so affine-mode outputs are not numerically
+    comparable to a ``mode="batch"`` forward of the same raw params).
+    """
     mask = st.valid_mask[:, None]
-    n = jnp.maximum(st.num_valid, 1).astype(jnp.float32)
     x = st.feats.astype(jnp.float32)
-    mean = jnp.sum(jnp.where(mask, x, 0), axis=0) / n
-    var = jnp.sum(jnp.where(mask, jnp.square(x - mean), 0), axis=0) / n
-    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    if mode == "affine":
+        y = x * p["scale"] + p["bias"]
+    else:
+        assert mode == "batch", mode
+        n = jnp.maximum(st.num_valid, 1).astype(jnp.float32)
+        mean = jnp.sum(jnp.where(mask, x, 0), axis=0) / n
+        var = jnp.sum(jnp.where(mask, jnp.square(x - mean), 0), axis=0) / n
+        y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
     if relu:
         y = jax.nn.relu(y)
     return st.replace_feats(jnp.where(mask, y, 0).astype(st.feats.dtype))
@@ -111,13 +129,18 @@ def layer_signatures(cfg: MinkUNetConfig) -> Dict[str, tuple]:
     return sigs
 
 
-def build_maps(st: SparseTensor) -> dict:
+def build_maps(st: SparseTensor, cache: Optional[MapCache] = None) -> dict:
     """Build every kernel map once (maps are shared within groups).
 
     A single ``MapCache`` spans the whole pyramid: the submanifold and
     strided convs at each level share one sorted coordinate table, and each
-    downsample's unique pass emits the next level's table for free."""
-    cache = MapCache.for_tensor(st)
+    downsample's unique pass emits the next level's table for free.  Callers
+    that already hold a warm cache for these coordinates (the serving
+    engine) pass it in; by default a fresh one is created per call, which is
+    also the only safe choice under ``jit`` (a cache must not outlive its
+    trace)."""
+    if cache is None:   # NOT `or`: an empty caller cache is falsy but wanted
+        cache = MapCache.for_tensor(st)
     maps = {}
     cur = st
     maps[("sub", 1)] = build_kmap(cur, 3, 1, cache=cache)
@@ -127,7 +150,8 @@ def build_maps(st: SparseTensor) -> dict:
         kd = build_kmap(cur, 2, 2, cache=cache)
         maps[("down", stride)] = kd
         cur = SparseTensor(coords=kd.out_coords, feats=jnp.zeros(
-            (kd.capacity, 1), st.feats.dtype), num_valid=kd.n_out, stride=kd.out_stride)
+            (kd.capacity, 1), st.feats.dtype), num_valid=kd.n_out, stride=kd.out_stride,
+            batch_bound=st.batch_bound, spatial_bound=st.spatial_bound)
         stride *= 2
         tensors[stride] = cur
         maps[("sub", stride)] = build_kmap(cur, 3, 1, cache=cache)
@@ -137,15 +161,20 @@ def build_maps(st: SparseTensor) -> dict:
     return maps
 
 
-def _conv_bn(p, name, st, kmap, cfgs, relu=True):
+def _conv_bn(p, name, st, kmap, cfgs, relu=True, bn_mode="batch"):
     st = apply_conv(p[name], st, kmap, cfgs)
-    return _bn_relu(p[f"{name}_bn"], st, relu)
+    return _bn_relu(p[f"{name}_bn"], st, relu, mode=bn_mode)
 
 
 def apply(params, st: SparseTensor, cfg: MinkUNetConfig,
           maps: Optional[dict] = None,
-          assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None) -> jax.Array:
-    """Returns per-point class logits (capacity, num_classes)."""
+          assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None,
+          bn_mode: str = "batch") -> jax.Array:
+    """Returns per-point class logits (capacity, num_classes).
+
+    ``bn_mode="affine"`` runs inference-mode normalization (see ``_bn_relu``)
+    — required by the serving engine so batched and per-scene forwards agree
+    bit-for-bit."""
     maps = maps or build_maps(st)
     assignment = assignment or {}
 
@@ -154,18 +183,19 @@ def apply(params, st: SparseTensor, cfg: MinkUNetConfig,
 
     def res_block(st, prefix, sig, kmap):
         idn = st.feats
-        st = _conv_bn(params, f"{prefix}_1", st, kmap, cfg_for(sig))
+        st = _conv_bn(params, f"{prefix}_1", st, kmap, cfg_for(sig), bn_mode=bn_mode)
         st = apply_conv(params[f"{prefix}_2"], st, kmap, cfg_for(sig))
-        st = _bn_relu(params[f"{prefix}_2_bn"], st, relu=False)
+        st = _bn_relu(params[f"{prefix}_2_bn"], st, relu=False, mode=bn_mode)
         y = jax.nn.relu(st.feats + (idn if idn.shape == st.feats.shape else 0))
         return st.replace_feats(jnp.where(st.valid_mask[:, None], y, 0))
 
-    x = _conv_bn(params, "stem1", st, maps[("sub", 1)], cfg_for((1, 3, "sub")))
-    x = _conv_bn(params, "stem2", x, maps[("sub", 1)], cfg_for((1, 3, "sub")))
+    x = _conv_bn(params, "stem1", st, maps[("sub", 1)], cfg_for((1, 3, "sub")), bn_mode=bn_mode)
+    x = _conv_bn(params, "stem2", x, maps[("sub", 1)], cfg_for((1, 3, "sub")), bn_mode=bn_mode)
     skips = [x]
     stride = 1
     for i in range(len(cfg.enc_channels)):
-        x = _conv_bn(params, f"down{i}", x, maps[("down", stride)], cfg_for((stride, 2, "down")))
+        x = _conv_bn(params, f"down{i}", x, maps[("down", stride)],
+                     cfg_for((stride, 2, "down")), bn_mode=bn_mode)
         stride *= 2
         for b in range(cfg.blocks_per_stage):
             x = res_block(x, f"enc{i}b{b}", (stride, 3, "sub"), maps[("sub", stride)])
@@ -175,7 +205,8 @@ def apply(params, st: SparseTensor, cfg: MinkUNetConfig,
     n = len(cfg.dec_channels)
     for i in range(n):
         stride //= 2
-        x = _conv_bn(params, f"up{i}", x, maps[("up", stride)], cfg_for((stride, 2, "up")))
+        x = _conv_bn(params, f"up{i}", x, maps[("up", stride)],
+                     cfg_for((stride, 2, "up")), bn_mode=bn_mode)
         skip = skips[-(i + 1)]
         x = x.replace_feats(jnp.concatenate([x.feats, skip.feats], axis=1))
         for b in range(cfg.blocks_per_stage):

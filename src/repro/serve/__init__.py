@@ -1,0 +1,11 @@
+"""Sparse serving engine: bucketed dynamic batching, cross-request map
+reuse, and persisted tuned plans (see engine.py for the architecture)."""
+from repro.serve.batcher import (PackedBatch, Scene, SceneBatcher,
+                                 SceneResult, scene_from_tensor)
+from repro.serve.bucketing import BucketLadder
+from repro.serve.engine import ARCHS, Engine, EngineStats
+from repro.serve.plans import PlanRegistry
+
+__all__ = ["ARCHS", "BucketLadder", "Engine", "EngineStats", "PackedBatch",
+           "PlanRegistry", "Scene", "SceneBatcher", "SceneResult",
+           "scene_from_tensor"]

@@ -1,0 +1,163 @@
+"""Scene queueing and (un)packing for the sparse serving engine.
+
+A *scene* is one request: a variable-size quantized point cloud.  The
+``SceneBatcher`` groups queued scenes FIFO into batches that fit a bucket,
+packs each group into one capacity-padded batched ``SparseTensor`` (batch
+index in coordinate column 0, padding rows at ``INVALID_COORD``), and
+unpacks per-scene rows back out of a batched model output by batch index.
+
+Packing declares ``batch_bound``/``spatial_bound`` on the batched tensor, so
+the mapping engine's single-argsort packed-key path is the norm for every
+served batch.  All padding work is host-side numpy: the device only ever
+sees the final static-shape tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_tensor import INVALID_COORD, SparseTensor
+from repro.serve.bucketing import BucketLadder
+
+
+@dataclasses.dataclass(frozen=True)
+class Scene:
+    """One request: quantized voxel coordinates + per-voxel features."""
+
+    coords: np.ndarray  # (n, D) int32 spatial voxel coords (no batch column)
+    feats: np.ndarray   # (n, C)
+
+    def __post_init__(self):
+        object.__setattr__(self, "coords", np.asarray(self.coords, np.int32))
+        object.__setattr__(self, "feats", np.asarray(self.feats))
+        assert self.coords.ndim == 2 and self.feats.ndim == 2
+        assert self.coords.shape[0] == self.feats.shape[0]
+
+    @property
+    def num_points(self) -> int:
+        return self.coords.shape[0]
+
+
+def scene_from_tensor(st: SparseTensor) -> Scene:
+    """Extract the valid rows of a single-scene SparseTensor as a Scene."""
+    n = int(st.num_valid)
+    coords = np.asarray(st.coords)[:n]
+    assert coords.size == 0 or (coords[:, 0] == coords[0, 0]).all(), \
+        "scene_from_tensor expects a single-batch tensor"
+    return Scene(coords=coords[:, 1:], feats=np.asarray(st.feats)[:n])
+
+
+@dataclasses.dataclass(frozen=True)
+class SceneResult:
+    """Per-scene output rows unpacked from a batched forward."""
+
+    coords: np.ndarray  # (m, D) int32 output voxel coords (stride multiples)
+    feats: np.ndarray   # (m, C_out)
+    stride: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedBatch:
+    """One batched request: the padded tensor plus its unpack manifest."""
+
+    st: SparseTensor
+    scene_sizes: Tuple[int, ...]   # rows per scene, in batch-index order
+    bucket: int                    # capacity the batch was padded to
+    digest: str                    # content hash of the packed coords
+
+    @property
+    def num_scenes(self) -> int:
+        return len(self.scene_sizes)
+
+
+class SceneBatcher:
+    """Queue + deterministic FIFO grouping + pack/unpack.
+
+    spatial_bound: declared |coord| bound every scene must respect — it is
+        the packed-key bit-budget promise; violating scenes are rejected at
+        pack time rather than silently dropping out of kernel maps.
+    """
+
+    def __init__(self, ladder: BucketLadder, spatial_bound: int):
+        assert spatial_bound > 0, "serving requires declared spatial bounds"
+        self.ladder = ladder
+        self.spatial_bound = int(spatial_bound)
+
+    def plan(self, sizes: Sequence[int]) -> List[List[int]]:
+        """Greedy FIFO grouping of scene sizes into bucket-fitting batches.
+
+        Deterministic: scenes stay in submission order; a batch closes when
+        adding the next scene would overflow the largest bucket or exceed
+        ``max_batch`` scenes.  Returns lists of scene indices.
+        """
+        groups: List[List[int]] = []
+        cur: List[int] = []
+        cur_rows = 0
+        for i, n in enumerate(sizes):
+            if n > self.ladder.max_capacity:
+                raise ValueError(f"scene {i} ({n} rows) exceeds largest bucket "
+                                 f"({self.ladder.max_capacity})")
+            if cur and (cur_rows + n > self.ladder.max_capacity
+                        or len(cur) >= self.ladder.max_batch):
+                groups.append(cur)
+                cur, cur_rows = [], 0
+            cur.append(i)
+            cur_rows += n
+        if cur:
+            groups.append(cur)
+        return groups
+
+    def pack(self, scenes: Sequence[Scene]) -> PackedBatch:
+        """Pack ≤ max_batch scenes into one bucket-padded SparseTensor."""
+        assert 1 <= len(scenes) <= self.ladder.max_batch, len(scenes)
+        sizes = tuple(s.num_points for s in scenes)
+        total = sum(sizes)
+        cap = self.ladder.select(total)
+        d = scenes[0].coords.shape[1]
+        c = scenes[0].feats.shape[1]
+
+        coords = np.full((cap, 1 + d), int(INVALID_COORD), np.int32)
+        feats = np.zeros((cap, c), dtype=scenes[0].feats.dtype)
+        off = 0
+        for b, s in enumerate(scenes):
+            assert s.coords.shape[1] == d and s.feats.shape[1] == c
+            if s.num_points and int(np.abs(s.coords).max()) > self.spatial_bound:
+                raise ValueError(
+                    f"scene {b} violates declared spatial_bound "
+                    f"{self.spatial_bound}: max |coord| = {np.abs(s.coords).max()}")
+            coords[off:off + s.num_points, 0] = b
+            coords[off:off + s.num_points, 1:] = s.coords
+            feats[off:off + s.num_points] = s.feats
+            off += s.num_points
+
+        digest = hashlib.blake2b(coords.tobytes(), digest_size=16).hexdigest()
+        st = SparseTensor(coords=jnp.asarray(coords), feats=jnp.asarray(feats),
+                          num_valid=jnp.asarray(total, jnp.int32), stride=1,
+                          batch_bound=self.ladder.max_batch,
+                          spatial_bound=self.spatial_bound)
+        return PackedBatch(st=st, scene_sizes=sizes, bucket=cap, digest=digest)
+
+    @staticmethod
+    def unpack(batch: PackedBatch, out_coords, out_feats, n_out,
+               out_stride: int = 1) -> List[SceneResult]:
+        """Split a batched model output back into per-scene rows.
+
+        Selects rows by the batch column of ``out_coords`` (valid rows
+        only), preserving row order — for stride-1 outputs that is exactly
+        the packed input order, for strided outputs the sorted-key order the
+        unique pass produced (both match the per-scene forward's order).
+        """
+        out_coords = np.asarray(out_coords)
+        out_feats = np.asarray(out_feats)
+        valid = np.arange(out_coords.shape[0]) < int(n_out)
+        results = []
+        for b in range(batch.num_scenes):
+            rows = valid & (out_coords[:, 0] == b)
+            results.append(SceneResult(coords=out_coords[rows, 1:],
+                                       feats=out_feats[rows],
+                                       stride=out_stride))
+        return results

@@ -1,0 +1,61 @@
+"""Capacity buckets for the sparse serving engine.
+
+JAX traces static shapes, so a serving engine that accepted every scene at
+its natural size would recompile per point count — unbounded compile churn.
+Instead, requests are packed into a small *ladder* of static ``Nmax``
+capacities (the classic bucketed-batching trick from NMT serving, applied to
+voxel counts): each batch is padded up to the smallest bucket that fits, so
+the number of distinct compiled executors is bounded by the ladder length
+and amortizes to zero over a long request stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLadder:
+    """A strictly-ascending ladder of static row capacities.
+
+    capacities: ascending static Nmax values; every compiled executor is
+        keyed by one of them.
+    max_batch: scenes per packed batch (declared as the batched tensor's
+        ``batch_bound``, so the packed-key engine budgets batch bits once).
+    """
+
+    capacities: Tuple[int, ...]
+    max_batch: int = 8
+
+    def __post_init__(self):
+        caps = tuple(int(c) for c in self.capacities)
+        assert caps and all(c > 0 for c in caps), caps
+        assert list(caps) == sorted(set(caps)), f"ladder must ascend: {caps}"
+        assert self.max_batch >= 1
+        object.__setattr__(self, "capacities", caps)
+
+    @property
+    def max_capacity(self) -> int:
+        return self.capacities[-1]
+
+    def select(self, n_rows: int) -> int:
+        """Smallest bucket capacity that fits ``n_rows`` (deterministic).
+
+        Raises ValueError when even the largest bucket is too small — the
+        caller decides whether to reject or split the request.
+        """
+        for cap in self.capacities:
+            if n_rows <= cap:
+                return cap
+        raise ValueError(
+            f"{n_rows} rows exceed the largest bucket ({self.max_capacity}); "
+            f"ladder={self.capacities}")
+
+    @staticmethod
+    def geometric(base: int, steps: int, growth: int = 2,
+                  max_batch: int = 8) -> "BucketLadder":
+        """``(base, base*growth, …)`` — the default ladder shape: jit
+        recompiles are O(steps) while padding waste stays < growth×."""
+        assert base > 0 and steps >= 1 and growth >= 2
+        return BucketLadder(tuple(base * growth ** i for i in range(steps)),
+                            max_batch=max_batch)

@@ -1,0 +1,90 @@
+"""Persisted autotuner plans: tune once, serve forever.
+
+The Sparse Autotuner's output is a per-group ``TrainDataflowConfig``
+assignment keyed by map-sharing signature ``(stride, kernel_size, kind)``.
+Tuning measures end-to-end latency (minutes of wall clock); a serving
+process must not pay that on every start.  ``PlanRegistry`` persists
+assignments to a small JSON file and loads them at engine startup — the
+serving analogue of the paper's offline tuning step.
+
+Schema (version 1)::
+
+    {"version": 1,
+     "plans": {"minkunet_kitti": {
+         "1:3:sub": {"fwd": {...DataflowConfig...}, "dgrad": …, "wgrad": …},
+         …}}}
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from repro.core.sparse_conv import TrainDataflowConfig
+
+_VERSION = 1
+
+Assignment = Dict[tuple, TrainDataflowConfig]
+
+
+def _sig_to_str(sig: tuple) -> str:
+    stride, k, kind = sig
+    return f"{int(stride)}:{int(k)}:{kind}"
+
+
+def _sig_from_str(s: str) -> tuple:
+    stride, k, kind = s.split(":")
+    return (int(stride), int(k), kind)
+
+
+class PlanRegistry:
+    """arch name → {group signature → TrainDataflowConfig}, JSON-persisted."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._plans: Dict[str, Assignment] = {}
+
+    def set(self, arch: str, assignment: Assignment) -> None:
+        self._plans[arch] = dict(assignment)
+
+    def get(self, arch: str) -> Assignment:
+        """The stored assignment for ``arch`` ({} when never tuned)."""
+        return dict(self._plans.get(arch, {}))
+
+    def archs(self):
+        return sorted(self._plans)
+
+    def to_dict(self) -> dict:
+        return {"version": _VERSION,
+                "plans": {arch: {_sig_to_str(sig): cfg.to_dict()
+                                 for sig, cfg in assignment.items()}
+                          for arch, assignment in sorted(self._plans.items())}}
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        assert path, "PlanRegistry.save needs a path"
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)  # atomic: a crashed save never corrupts plans
+        self.path = path
+        return path
+
+    @classmethod
+    def load(cls, path: str, missing_ok: bool = True) -> "PlanRegistry":
+        reg = cls(path=path)
+        if not os.path.exists(path):
+            if missing_ok:
+                return reg
+            raise FileNotFoundError(path)
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("version") != _VERSION:
+            raise ValueError(f"unsupported plan version {doc.get('version')!r} "
+                             f"in {path} (expected {_VERSION})")
+        for arch, groups in doc.get("plans", {}).items():
+            reg._plans[arch] = {
+                _sig_from_str(s): TrainDataflowConfig.from_dict(d)
+                for s, d in groups.items()}
+        return reg

@@ -1,0 +1,38 @@
+"""Synthetic request streams for the serving CLI, benchmark and tests.
+
+Scenes are drawn from the same LiDAR-statistics generator the rest of the
+repo benchmarks with (``data.synthetic.lidar_scene``), at per-request point
+counts sampled from a declared range — the mixed-size traffic a deployed
+perception service sees frame to frame.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import lidar_scene
+from repro.serve.batcher import Scene, scene_from_tensor
+
+
+def lidar_stream(seed: int, count: int, channels: int,
+                 n_range: Tuple[int, int] = (200, 1200),
+                 extent: float = 50.0, voxel: float = 0.4) -> Tuple[List[Scene], int]:
+    """``count`` mixed-size scenes + the spatial bound they all respect.
+
+    Replaying the same stream through a warm engine (as the CLI and
+    benchmark do) models repeated-frame traffic: identical packed batches
+    hit the engine's cross-request map cache.
+    """
+    rng = np.random.default_rng(seed)
+    lo, hi = n_range
+    margin = 8.0
+    bound = int(np.ceil((extent + margin) / voxel)) + 2
+    scenes: List[Scene] = []
+    for i in range(count):
+        n = int(rng.integers(lo, hi + 1))
+        st = lidar_scene(jax.random.PRNGKey(seed * 100003 + i), n, n, channels,
+                         extent=extent, voxel=voxel)
+        scenes.append(scene_from_tensor(st))
+    return scenes, bound

@@ -1,5 +1,5 @@
-"""Map-construction latency: packed single-sort engine vs the seed's
-multi-word sort/search path.
+"""Map-construction latency: the packed single-sort engine, uncached vs
+cross-layer cached (``MapCache`` table reuse + strided-output adoption).
 
 The paper's Tables 3 vs 4 show mapping-operator overhead (bitmask building,
 sorting, reordering) can flip end-to-end rankings; Minuet (PAPERS.md) makes
@@ -8,13 +8,14 @@ mapping path in isolation:
 
 * single-layer kernel-map construction (submanifold K=3 and strided K=2)
   on the deterministic CenterPoint detection scene, jitted, best-of-n;
-* the full CenterPoint map stack (5 submanifold + 4 strided maps) with the
-  cross-layer ``MapCache`` vs the legacy per-layer rebuild;
+* the full CenterPoint map stack (5 submanifold + 4 strided maps) built
+  through the execution plan's ``KmapSpec`` program (cross-layer
+  ``MapCache``: shared tables + adoption edges) vs the same stack with
+  every map built cold — the cached-vs-uncached A/B that replaced the
+  deleted legacy-engine A/B;
 * split-plan construction with and without the fused tile-occupancy pass.
 
-``--tiny`` runs a reduced scene for CI smoke coverage.  The ``legacy``
-engine rows exist only for this A/B and disappear when the legacy path is
-deleted (ROADMAP).
+``--tiny`` runs a reduced scene for CI smoke coverage.
 """
 from __future__ import annotations
 
@@ -27,6 +28,28 @@ from repro.core import kmap as km
 from repro.models import centerpoint
 
 
+def _stack_uncached(stx):
+    """The CenterPoint map ladder with every table built from scratch —
+    what the per-layer world pays without the plan's adoption edges."""
+    import jax.numpy as jnp
+
+    from repro.core.sparse_tensor import SparseTensor
+
+    maps = {("sub", 1): km.build_kmap(stx, 3, 1)}
+    cur, stride = stx, 1
+    for _ in range(4):
+        kd = km.build_kmap(cur, 2, 2)
+        maps[("down", stride)] = kd
+        cur = SparseTensor(coords=kd.out_coords,
+                           feats=jnp.zeros((kd.capacity, 1), stx.feats.dtype),
+                           num_valid=kd.n_out, stride=kd.out_stride,
+                           batch_bound=stx.batch_bound,
+                           spatial_bound=stx.spatial_bound)
+        stride *= 2
+        maps[("sub", stride)] = km.build_kmap(cur, 3, 1)
+    return maps
+
+
 def run(tiny: bool = False):
     if tiny:
         stx = common.det_scene(n=300, cap=512)
@@ -34,26 +57,22 @@ def run(tiny: bool = False):
     else:
         stx = common.det_scene()
         iters = 5
+
+    fn_sub = jax.jit(lambda: km.build_kmap(stx, 3, 1))
+    common.emit("kmap/sub_k3", common.time_fn(lambda: fn_sub(), iters=iters), "")
+
+    fn_down = jax.jit(lambda: km.build_kmap(stx, 2, 2))
+    common.emit("kmap/down_k2s2", common.time_fn(lambda: fn_down(), iters=iters), "")
+
     results = {}
-    for engine in ("legacy", "packed"):
-        fn_sub = jax.jit(lambda e=engine: km.build_kmap(stx, 3, 1, engine=e))
-        us = common.time_fn(lambda: fn_sub(), iters=iters)
-        results[f"sub/{engine}"] = us
-        common.emit(f"kmap/sub_k3/{engine}", us, "")
-
-        fn_down = jax.jit(lambda e=engine: km.build_kmap(stx, 2, 2, engine=e))
-        us = common.time_fn(lambda: fn_down(), iters=iters)
-        results[f"down/{engine}"] = us
-        common.emit(f"kmap/down_k2s2/{engine}", us, "")
-
-        fn_stack = jax.jit(lambda e=engine: centerpoint.build_maps(stx, engine=e))
-        us = common.time_fn(lambda: fn_stack(), iters=iters)
-        results[f"stack/{engine}"] = us
-        common.emit(f"kmap/centerpoint_stack/{engine}", us, "")
-
-    for name in ("sub", "down", "stack"):
-        ratio = results[f"{name}/legacy"] / max(results[f"{name}/packed"], 1e-9)
-        common.emit(f"kmap/speedup/{name}", 0.0, f"packed_vs_legacy={ratio:.2f}x")
+    for name, fn in (("uncached", _stack_uncached),
+                     ("cached", centerpoint.build_maps)):
+        f = jax.jit(lambda fn=fn: fn(stx))
+        us = common.time_fn(lambda: f(), iters=iters)
+        results[name] = us
+        common.emit(f"kmap/centerpoint_stack/{name}", us, "")
+    ratio = results["uncached"] / max(results["cached"], 1e-9)
+    common.emit("kmap/speedup/stack", 0.0, f"cached_vs_uncached={ratio:.2f}x")
 
     # split-plan construction: fused occupancy vs separate pass
     kmap = km.build_kmap(stx, 3, 1)

@@ -1,6 +1,7 @@
-"""The Sparse Autotuner end to end: group partition → greedy end-to-end
-search → per-group dataflow assignment, on MinkUNet (inference) and the
-training tuner with both binding schemes.
+"""The Sparse Autotuner end to end on the execution-plan IR: declare →
+compile → tune, on MinkUNet (inference) and the training tuner with both
+binding schemes (paper Fig. 13).  The tuners consume and produce
+``core.plan.NetworkPlan``s — the same artifact the serving engine persists.
 
     PYTHONPATH=src python examples/autotune.py
 """
@@ -8,9 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dataflows as df
-from repro.core.autotuner import (Autotuner, TrainingAutotuner,
-                                  partition_groups, timeit_fn)
-from repro.core.sparse_conv import TrainDataflowConfig
+from repro.core.autotuner import timeit_fn
+from repro.core.plan import PlanTuner, TrainingPlanTuner
 from repro.data.synthetic import lidar_scene
 from repro.models import minkunet
 
@@ -19,11 +19,10 @@ def main():
     cfg = minkunet.MinkUNetConfig(width=0.25, blocks_per_stage=1)
     st = lidar_scene(jax.random.PRNGKey(0), 1500, 2048, 4, extent=40.0, voxel=0.5)
     params = minkunet.init_params(cfg, jax.random.PRNGKey(1))
-    maps = minkunet.build_maps(st)
-    sigs = minkunet.layer_signatures(cfg)
-    groups = partition_groups(sigs)
-    sig_of = {g.name: sigs[g.layer_names[0]] for g in groups}
-    print(f"{len(sigs)} conv layers → {len(groups)} map-sharing groups")
+    nplan = minkunet.network_plan(cfg)
+    maps = nplan.build_maps(st)
+    groups = nplan.groups()
+    print(f"{len(nplan.layers)} conv layers → {len(groups)} map-sharing groups")
 
     space = [df.DataflowConfig("gather_scatter"),
              df.DataflowConfig("fetch_on_demand"),
@@ -31,31 +30,26 @@ def main():
              df.DataflowConfig("implicit_gemm", n_splits=1),
              df.DataflowConfig("implicit_gemm", n_splits=2)]
 
-    def measure(assign):
-        amap = {sig_of[k]: TrainDataflowConfig.bind_all(v) for k, v in assign.items()}
-        fn = jax.jit(lambda p: minkunet.apply(p, st, cfg, maps, assignment=amap))
+    def measure(candidate):
+        fn = jax.jit(lambda p: candidate.apply(p, st, maps))
         return timeit_fn(lambda: jax.block_until_ready(fn(params)), warmup=1, iters=2)
 
-    tuner = Autotuner(groups, space, measure)
-    best = tuner.tune()
+    tuned = PlanTuner(nplan, space, measure).tune()
     print("\nper-group inference assignment:")
-    for g in groups:
-        c = best[g.name]
-        print(f"  {sig_of[g.name]}: {c.dataflow} splits={c.n_splits} "
-              f"({len(g.layer_names)} layers)")
-    base = measure({g.name: df.DEFAULT_CONFIG for g in groups})
-    tuned = measure(best)
-    print(f"default {base * 1e3:.1f} ms → tuned {tuned * 1e3:.1f} ms "
-          f"({base / tuned:.2f}x)")
+    for sig, c3 in sorted(tuned.assignment().items(), key=str):
+        c = c3.fwd
+        n_layers = sum(1 for lp in tuned.layers if lp.sig == sig)
+        print(f"  {sig}: {c.dataflow} splits={c.n_splits} ({n_layers} layers)")
+    base, best = measure(nplan), measure(tuned)
+    print(f"default {base * 1e3:.1f} ms → tuned {best * 1e3:.1f} ms "
+          f"({base / best:.2f}x)")
 
     # training tuner: both binding schemes (paper Fig. 13)
     labels = jnp.zeros((st.capacity,), jnp.int32)
 
-    def measure_train(assign3):
-        amap = {sig_of[k]: v for k, v in assign3.items()}
-
+    def measure_train(candidate):
         def loss(p):
-            lg = minkunet.apply(p, st, cfg, maps, assignment=amap)
+            lg = candidate.apply(p, st, maps)
             return -jnp.sum(jax.nn.log_softmax(lg)[jnp.arange(st.capacity), labels])
 
         fn = jax.jit(lambda p: jax.grad(loss)(p))
@@ -63,8 +57,7 @@ def main():
 
     small = space[:3]
     for scheme in ("bind_fwd_dgrad", "bind_dgrad_wgrad"):
-        t = TrainingAutotuner(groups, small, measure_train, scheme)
-        out = t.tune()
+        out = TrainingPlanTuner(nplan, small, measure_train, scheme).tune()
         lat = measure_train(out)
         print(f"training scheme {scheme}: {lat * 1e3:.1f} ms/step")
 

@@ -16,6 +16,14 @@ redundant work and memory traffic land:
 the distributed dry-run, where the roofline is derived from HLO);
 ``backend='pallas'`` dispatches the hand-tiled kernels (validated in
 interpret mode on CPU, native on TPU).
+
+Every dataflow additionally honours a ``PrecisionPolicy``
+(``core/precision.py``): GEMM operands are cast to ``policy.compute``
+(bf16 under the mixed-precision policy), partial sums accumulate in
+``policy.accum`` (fp32 — the Pallas kernels already keep an fp32 VMEM
+accumulator, so operand-level casting composes), and results come out in
+``policy.output`` (or the input features' dtype when unset).  The default
+FP32 policy is bit-identical to the pre-policy behaviour.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.kmap import KernelMap, SplitPlan, make_split_plan
+from repro.core.precision import FP32, PrecisionPolicy, gemm_operand
 from repro.kernels.fetch_on_demand.ops import fetch_on_demand as fod_pallas_op
 from repro.kernels.fetch_on_demand.ref import fetch_on_demand_ref
 from repro.kernels.implicit_gemm.ops import implicit_gemm as igemm_pallas_op
@@ -76,7 +85,8 @@ def plan_for(kmap: KernelMap, cfg: DataflowConfig) -> SplitPlan:
     return make_split_plan(kmap, cfg.effective_splits, sort=cfg.sorted)
 
 
-def _gather_scatter_xla(x, w, kmap: KernelMap) -> jax.Array:
+def _gather_scatter_xla(x, w, kmap: KernelMap,
+                        precision: PrecisionPolicy = FP32) -> jax.Array:
     """Vanilla gather-GEMM-scatter via lax.scan over stacked per-δ maps.
 
     TorchSparse v1's "adaptive grouping" batches offsets with similar |M_δ|;
@@ -84,49 +94,72 @@ def _gather_scatter_xla(x, w, kmap: KernelMap) -> jax.Array:
     scan *is* the grouped batched GEMM (DESIGN.md §2, sequential host loop →
     scan)."""
     cap_out = kmap.capacity
+    ct, at = precision.compute_dtype, precision.accum_dtype
+    # round/cast the loop-invariant operands ONCE, not per δ iteration
+    xq, wq = gemm_operand(x, ct, at), gemm_operand(w, ct, at)
 
     def body(acc, inputs):
         wk, i_in, i_out = inputs
-        rows = jnp.where((i_in >= 0)[:, None], x[jnp.clip(i_in, 0)], 0)
-        y = jnp.dot(rows.astype(jnp.float32), wk.astype(jnp.float32))
+        rows = jnp.where((i_in >= 0)[:, None], xq[jnp.clip(i_in, 0)], 0)
+        y = jnp.dot(rows, wk, preferred_element_type=at)
         return acc.at[i_out].add(y, mode="drop"), None
 
-    acc0 = jnp.zeros((cap_out, w.shape[-1]), jnp.float32)
-    acc, _ = jax.lax.scan(body, acc0, (w, kmap.ws_in, kmap.ws_out))
-    return acc.astype(x.dtype)
+    acc0 = jnp.zeros((cap_out, w.shape[-1]), at)
+    acc, _ = jax.lax.scan(body, acc0, (wq, kmap.ws_in, kmap.ws_out))
+    return acc.astype(precision.output_dtype(x.dtype))
 
 
-def _implicit_gemm_xla(x, w, kmap: KernelMap) -> jax.Array:
+def _implicit_gemm_xla(x, w, kmap: KernelMap,
+                       precision: PrecisionPolicy = FP32) -> jax.Array:
     """Output-stationary jnp path (splits/sorting are a no-op for the math)."""
-    return implicit_gemm_ref(x, w, kmap.m_out)
+    return implicit_gemm_ref(x, w, kmap.m_out,
+                             acc_dtype=precision.accum_dtype,
+                             compute_dtype=precision.compute_dtype,
+                             out_dtype=precision.output_dtype(x.dtype))
+
+
+def _pallas_operands(x, w, precision: PrecisionPolicy):
+    """Operand-level mixed precision for the Pallas kernels: they already
+    keep an fp32 VMEM accumulator (preferred_element_type=f32) and emit
+    ``x.dtype``, so casting the operands is the whole policy."""
+    return x.astype(precision.compute_dtype), w.astype(precision.compute_dtype)
 
 
 def sparse_conv_forward(x: jax.Array, w: jax.Array, kmap: KernelMap,
                         cfg: DataflowConfig = DEFAULT_CONFIG,
-                        plan: Optional[SplitPlan] = None) -> jax.Array:
+                        plan: Optional[SplitPlan] = None,
+                        precision: PrecisionPolicy = FP32) -> jax.Array:
     """Dispatch one sparse convolution. x: (N_in_cap, Cin), w: (KD, Cin, Cout).
 
-    Returns (N_out_cap, Cout)."""
+    Returns (N_out_cap, Cout) in ``precision.output`` (input dtype by
+    default)."""
     if cfg.backend == "pallas":
+        out = precision.output_dtype(x.dtype)
         if cfg.dataflow == "implicit_gemm":
             if plan is None:
                 plan = plan_for(kmap, cfg)
-            return igemm_pallas_op(x, w, kmap, plan, tile_m=cfg.tile_m,
-                                   tile_n=cfg.tile_n)
+            xc, wc = _pallas_operands(x, w, precision)
+            return igemm_pallas_op(xc, wc, kmap, plan, tile_m=cfg.tile_m,
+                                   tile_n=cfg.tile_n).astype(out)
         if cfg.dataflow == "fetch_on_demand":
-            return fod_pallas_op(x, w, kmap, tile_r=cfg.tile_m)
-        return _gather_scatter_xla(x, w, kmap)  # g-g-s *is* the vendor path
+            xc, wc = _pallas_operands(x, w, precision)
+            return fod_pallas_op(xc, wc, kmap, tile_r=cfg.tile_m).astype(out)
+        return _gather_scatter_xla(x, w, kmap, precision)  # g-g-s *is* the vendor path
     # XLA backend
     if cfg.dataflow == "implicit_gemm":
-        return _implicit_gemm_xla(x, w, kmap)
+        return _implicit_gemm_xla(x, w, kmap, precision)
     if cfg.dataflow == "fetch_on_demand":
-        return fetch_on_demand_ref(x, w, kmap.ws_in, kmap.ws_out, kmap.capacity)
-    return _gather_scatter_xla(x, w, kmap)
+        return fetch_on_demand_ref(x, w, kmap.ws_in, kmap.ws_out, kmap.capacity,
+                                   acc_dtype=precision.accum_dtype,
+                                   compute_dtype=precision.compute_dtype,
+                                   out_dtype=precision.output_dtype(x.dtype))
+    return _gather_scatter_xla(x, w, kmap, precision)
 
 
 def sparse_conv_dgrad(dy: jax.Array, w: jax.Array, kmap: KernelMap,
                       cfg: DataflowConfig = DEFAULT_CONFIG,
-                      in_capacity: Optional[int] = None) -> jax.Array:
+                      in_capacity: Optional[int] = None,
+                      precision: PrecisionPolicy = FP32) -> jax.Array:
     """Input-feature gradient: a sparse conv over the *transposed* map with
     W^T per offset — expressed weight-stationarily by swapping the pair lists
     (so any dataflow config applies; the autotuner tunes it separately).
@@ -140,33 +173,45 @@ def sparse_conv_dgrad(dy: jax.Array, w: jax.Array, kmap: KernelMap,
         cap_in = in_capacity
     else:
         cap_in = int(jnp.shape(kmap.ws_in)[1])  # submanifold: == out capacity
+    ct, at = precision.compute_dtype, precision.accum_dtype
+    dyq, wq = gemm_operand(dy, ct, at), gemm_operand(w, ct, at)
 
     def body(acc, inputs):
         wk, i_in, i_out = inputs
-        rows = jnp.where((i_out >= 0)[:, None], dy[jnp.clip(i_out, 0)], 0)
-        g = jnp.dot(rows.astype(jnp.float32), wk.astype(jnp.float32).T)
+        rows = jnp.where((i_out >= 0)[:, None], dyq[jnp.clip(i_out, 0)], 0)
+        g = jnp.dot(rows, wk.T, preferred_element_type=at)
         return acc.at[i_in].add(g, mode="drop"), None
 
-    acc0 = jnp.zeros((cap_in, w.shape[1]), jnp.float32)
-    acc, _ = jax.lax.scan(body, acc0, (w, kmap.ws_in, kmap.ws_out))
-    return acc.astype(dy.dtype)
+    acc0 = jnp.zeros((cap_in, w.shape[1]), at)
+    acc, _ = jax.lax.scan(body, acc0, (wq, kmap.ws_in, kmap.ws_out))
+    return acc.astype(precision.output_dtype(dy.dtype))
 
 
 def sparse_conv_wgrad(x: jax.Array, dy: jax.Array, kmap: KernelMap,
-                      cfg: DataflowConfig = DEFAULT_CONFIG) -> jax.Array:
+                      cfg: DataflowConfig = DEFAULT_CONFIG,
+                      precision: PrecisionPolicy = FP32) -> jax.Array:
     """Weight gradient: per-δ  gather(X)ᵀ @ gather(dY) — a GEMM with *two*
     sparse iterators (the reason the paper tunes wgrad separately: its K loop
-    runs over N_out, so reordering/pair layout dominates)."""
+    runs over N_out, so reordering/pair layout dominates).
+
+    Partial sums accumulate in ``precision.accum`` (fp32) and round at most
+    once at the end; the custom_vjp caller re-casts to the weight dtype so
+    the cotangent always matches the parameter leaf."""
     if cfg.backend == "pallas":
         from repro.kernels.wgrad.ops import wgrad as wgrad_kernel
 
-        return wgrad_kernel(x, dy, kmap, tile_r=cfg.tile_m).astype(x.dtype)
+        xc, yc = (x.astype(precision.compute_dtype),
+                  dy.astype(precision.compute_dtype))
+        return wgrad_kernel(xc, yc, kmap,
+                            tile_r=cfg.tile_m).astype(precision.output_dtype(x.dtype))
+    ct, at = precision.compute_dtype, precision.accum_dtype
+    xq, dyq = gemm_operand(x, ct, at), gemm_operand(dy, ct, at)
 
     def body(_, inputs):
         i_in, i_out = inputs
-        xs = jnp.where((i_in >= 0)[:, None], x[jnp.clip(i_in, 0)], 0)
-        ys = jnp.where((i_out >= 0)[:, None], dy[jnp.clip(i_out, 0)], 0)
-        return None, jnp.dot(xs.astype(jnp.float32).T, ys.astype(jnp.float32))
+        xs = jnp.where((i_in >= 0)[:, None], xq[jnp.clip(i_in, 0)], 0)
+        ys = jnp.where((i_out >= 0)[:, None], dyq[jnp.clip(i_out, 0)], 0)
+        return None, jnp.dot(xs.T, ys, preferred_element_type=at)
 
     _, dw = jax.lax.scan(body, None, (kmap.ws_in, kmap.ws_out))
-    return dw.astype(x.dtype)
+    return dw.astype(precision.output_dtype(x.dtype))

@@ -38,10 +38,11 @@ bounds, or the ``INVALID_COORD`` padding sentinel) pack to the ``MISS`` key
 pack to ``PAD`` (int32 max), which sorts last.  Everything is int32 (x64
 stays disabled framework-wide).
 
-``SortedCoords`` below is the seed's multi-word reference implementation.
-It is kept (a) as the oracle for the packed ≡ multi-word property tests and
-(b) for the temporary ``engine="legacy"`` A/B flag in ``kmap.build_kmap``;
-it is scheduled for deletion once the A/B window closes (ROADMAP).
+(``SortedCoords``, the seed's multi-word reference table, and the
+``engine="legacy"`` A/B flag in ``kmap.build_kmap`` were deleted after a
+release cycle of bit-identical cross-checks; the property tests now verify
+against brute-force numpy oracles.  The word-wise helpers below remain —
+they serve multi-word packed keys, ``raw`` specs and ``voxelize``.)
 """
 from __future__ import annotations
 
@@ -289,13 +290,13 @@ class CoordTable:
         return jnp.where(hit, self.order[pos], -1).astype(jnp.int32)
 
     def lookup(self, query_coords: jax.Array, valid=None) -> jax.Array:
-        """Coordinate-row interface mirroring ``SortedCoords.lookup``."""
+        """Coordinate-row lookup: pack the query rows, search the table."""
         return self.lookup_keys(pack_keys(query_coords, self.spec,
                                           valid=valid, query=True))
 
 
 # ---------------------------------------------------------------------------
-# Legacy multi-word path (reference oracle; engine="legacy" A/B — to delete)
+# Multi-word helpers (raw/two-word specs, voxelize, non-pow2-stride dedup)
 # ---------------------------------------------------------------------------
 
 def lex_argsort(words: jax.Array) -> jax.Array:
@@ -322,33 +323,3 @@ def _lex_less(row_a, row_b):
         lt = lt | (eq & (row_a[..., c] < row_b[..., c]))
         eq = eq & (row_a[..., c] == row_b[..., c])
     return lt
-
-
-class SortedCoords:
-    """Sorted coordinate table answering batched exact-match queries
-    (multi-word reference path — one stable argsort per column, 4-word
-    compares in the search loop)."""
-
-    def __init__(self, coords: jax.Array, valid_mask: jax.Array):
-        big = jnp.int32(jnp.iinfo(jnp.int32).max)
-        words = jnp.where(valid_mask[:, None], coords.astype(jnp.int32), big)
-        self.order = lex_argsort(words)
-        self.sorted_words = words[self.order]
-        self.n = coords.shape[0]
-
-    def lookup(self, query_coords: jax.Array) -> jax.Array:
-        """Index of each query row in the original array, or -1 if absent."""
-        q = query_coords.astype(jnp.int32)
-        m = q.shape[0]
-        lo = jnp.zeros((m,), jnp.int32)
-        hi = jnp.full((m,), self.n, jnp.int32)
-        iters = max(1, math.ceil(math.log2(max(self.n, 2))) + 1)
-        for _ in range(iters):
-            mid = (lo + hi) // 2
-            mid_rows = self.sorted_words[jnp.clip(mid, 0, self.n - 1)]
-            less = _lex_less(mid_rows, q)
-            lo = jnp.where(less, mid + 1, lo)
-            hi = jnp.where(less, hi, mid)
-        pos = jnp.clip(lo, 0, self.n - 1)
-        hit = rows_equal(self.sorted_words[pos], q)
-        return jnp.where(hit, self.order[pos], -1).astype(jnp.int32)

@@ -10,11 +10,11 @@ its own:
   — the per-offset gather/scatter lists.  Required by gather-GEMM-scatter and
   fetch-on-demand.
 
-Packed-key mapping engine (default)
------------------------------------
+Packed-key mapping engine
+-------------------------
 The paper is explicit that mapping overhead (bitmask building, sorting,
-reordering) can dominate end-to-end rankings (Tables 3 vs 4).  The default
-``engine="packed"`` path therefore minimizes sort work:
+reordering) can dominate end-to-end rankings (Tables 3 vs 4).  The mapping
+path therefore minimizes sort work:
 
 * the coordinate table is a ``hashing.CoordTable`` — coordinates packed into
   scalar int32 keys, **one** argsort, scalar binary-search compares;
@@ -29,9 +29,10 @@ reordering) can dominate end-to-end rankings (Tables 3 vs 4).  The default
   ``CoordTable`` — adopted for free through the sidecar ``MapCache`` so
   submanifold layers at the same stride never rebuild the table.
 
-``engine="legacy"`` keeps the seed's multi-word path for A/B benchmarking
-(``benchmarks/bench_kmap.py``) and for the packed ≡ legacy equivalence
-tests; it will be deleted once the A/B window closes (see ROADMAP).
+(The seed's multi-word ``engine="legacy"`` A/B path was deleted after a
+release cycle of bit-identical cross-checks — see ROADMAP PR-1; the tests
+in tests/test_mapping_engine.py now verify against brute-force numpy
+references instead.)
 
 On top of the raw map we build the paper's redundancy-reduction machinery:
 per-output neighbor **bitmasks**, bitmask **sorting** (Fig. 6), arbitrary
@@ -176,7 +177,8 @@ class MapCache:
 
 def _unique_coords(coords: jax.Array, valid: jax.Array, capacity: int):
     """Sort-unique of coordinate rows; returns (coords[capacity], count).
-    (Legacy multi-word path — packed engine uses ``_unique_from_keys``.)"""
+    (Multi-word fallback for non-power-of-two strides — the happy path is
+    ``_unique_from_keys``.)"""
     big = jnp.int32(jnp.iinfo(jnp.int32).max)
     words = jnp.where(valid[:, None], coords.astype(jnp.int32), big)
     order = hashing.lex_argsort(words)
@@ -293,7 +295,7 @@ def _compact_ws(m_out: jax.Array):
 def build_kmap(x: SparseTensor, kernel_size: int, stride: int = 1,
                transposed: bool = False, out_coords: Optional[jax.Array] = None,
                n_out: Optional[jax.Array] = None, out_capacity: Optional[int] = None,
-               cache: Optional[MapCache] = None, engine: str = "packed") -> KernelMap:
+               cache: Optional[MapCache] = None) -> KernelMap:
     """Build the kernel map for a sparse convolution over ``x``.
 
     stride == 1                 : submanifold conv, outputs = inputs.
@@ -303,14 +305,7 @@ def build_kmap(x: SparseTensor, kernel_size: int, stride: int = 1,
 
     ``cache``: optional ``MapCache`` — reuses the sorted coordinate table
     across calls at the same stride and adopts strided outputs' tables.
-    ``engine``: "packed" (default, single-sort) or "legacy" (seed multi-word
-    path, kept temporarily for A/B benchmarking — scheduled for deletion).
     """
-    if engine == "legacy":
-        return _build_kmap_legacy(x, kernel_size, stride, transposed,
-                                  out_coords, n_out, out_capacity)
-    assert engine == "packed", engine
-
     d = x.ndim_space
     t = x.stride
     offs = kernel_offsets(kernel_size, d)
@@ -377,71 +372,6 @@ def build_kmap(x: SparseTensor, kernel_size: int, stride: int = 1,
     if cache is not None and child_table is not None:
         cache.adopt(kmap.out_coords, child_table)
     return kmap
-
-
-def _build_kmap_legacy(x: SparseTensor, kernel_size: int, stride: int = 1,
-                       transposed: bool = False, out_coords: Optional[jax.Array] = None,
-                       n_out: Optional[jax.Array] = None,
-                       out_capacity: Optional[int] = None) -> KernelMap:
-    """Seed mapping path: 4 chained argsorts for the table, K^D independent
-    4-word binary searches, one argsort per offset for the pair lists.  Kept
-    verbatim behind ``engine="legacy"`` for A/B; to be deleted."""
-    d = x.ndim_space
-    t = x.stride
-    offs = kernel_offsets(kernel_size, d)
-    cap_in = x.capacity
-    table = hashing.SortedCoords(x.coords, x.valid_mask)
-
-    if transposed:
-        assert out_coords is not None and n_out is not None
-        out_stride = t // stride
-        assert out_stride >= 1
-        n_out_cap = out_capacity or out_coords.shape[0]
-        out_coords = out_coords[:n_out_cap]
-        delta_scale = -out_stride
-    elif stride == 1:
-        out_coords, n_out = x.coords, x.num_valid
-        out_stride = t
-        n_out_cap = out_capacity or cap_in
-        out_coords = out_coords[:n_out_cap]
-        delta_scale = t
-    else:
-        out_stride = t * stride
-        n_out_cap = out_capacity or cap_in
-        grid = jnp.concatenate(
-            [x.coords[:, :1],
-             (x.coords[:, 1:] // out_stride) * out_stride], axis=1)
-        grid = jnp.where(x.valid_mask[:, None], grid, INVALID_COORD)
-        out_coords, n_out = _unique_coords(grid, x.valid_mask, n_out_cap)
-        delta_scale = t
-
-    out_valid = jnp.arange(n_out_cap) < n_out
-
-    def query(off):
-        shift = jnp.concatenate([jnp.zeros((1,), jnp.int32), off * delta_scale])
-        q = out_coords + shift[None, :]
-        q = jnp.where(out_valid[:, None], q, INVALID_COORD)
-        return table.lookup(q)
-
-    m_out = jax.vmap(query, in_axes=0, out_axes=1)(jnp.asarray(offs))  # (N_out_cap, KD)
-    m_out = jnp.where(out_valid[:, None], m_out, -1)
-
-    hit = m_out >= 0  # (N_out_cap, KD)
-    ws_count = jnp.sum(hit, axis=0).astype(jnp.int32)
-
-    def compact(col_hit, col_idx):
-        order = jnp.argsort(~col_hit)  # valid rows first, stable
-        in_idx = jnp.where(col_hit[order], col_idx[order], -1)
-        out_idx = jnp.where(col_hit[order], order, -1)
-        return in_idx.astype(jnp.int32), out_idx.astype(jnp.int32)
-
-    ws_in, ws_out = jax.vmap(compact, in_axes=(1, 1), out_axes=0)(hit, m_out)
-
-    bm = jnp.where(out_valid, _bitmask(hit), 0)
-
-    return KernelMap(m_out=m_out, out_coords=out_coords, n_out=jnp.asarray(n_out, jnp.int32),
-                     ws_in=ws_in, ws_out=ws_out, ws_count=ws_count, bitmask=bm,
-                     out_stride=out_stride, kernel_size=kernel_size)
 
 
 def transpose_kmap(fwd: KernelMap, x_fine: SparseTensor) -> KernelMap:

@@ -1,0 +1,521 @@
+"""Unified execution-plan compiler: the `LayerPlan`/`NetworkPlan` IR.
+
+TorchSparse++'s central claim is that a small kernel generator plus a
+*whole-network* autotuner beats hand-engineered kernels: the tuner assigns a
+dataflow configuration **per layer group for the entire network** (paper §4),
+and mixed-precision training is where it wins biggest (§5).  Before this
+module, that network-level view existed only implicitly — models hand-plumbed
+``apply_conv`` calls, ``DataflowConfig`` dicts, ``MapCache`` handles and
+``SplitPlan`` policies, and nothing in the conv stack knew about precision.
+
+The IR makes the network the unit of compilation:
+
+* ``LayerPlan`` — one conv layer: its ``ConvSpec``, which kernel map it runs
+  on (``map_ref``), its map-sharing signature and tuner group, its
+  ``TrainDataflowConfig`` (fwd/dgrad/wgrad dataflows), and its
+  ``PrecisionPolicy``.
+* ``KmapSpec`` — one kernel-map build step with the *explicit* dependency
+  edges that used to be implicit in ``build_maps`` call order: which tensor
+  stride it reads, whether its output table is adopted into the ``MapCache``
+  (strided maps seed the next pyramid level's table for free), and which
+  forward map a transposed map reuses.
+* ``NetworkPlan`` — the compiled artifact every consumer shares: models
+  execute through ``NetworkPlan.apply``, the autotuner rebinds per-group
+  configs with ``with_assignment``, the serving engine persists/loads it as
+  JSON (``serve/plans.PlanRegistry`` schema v2), and the training stack
+  threads each layer's precision through the ``sparse_conv_apply``
+  custom_vjp.
+
+Lifecycle: **declare → compile → tune → persist → serve/train.**  Models
+declare their layer list (a ``ModelDecl``); ``compile_plan`` partitions
+tuner groups, binds dataflow assignments and precision policies;
+``resolve_tiles`` applies the generator's adaptive tiling (paper §6.2) once
+real kernel maps exist; ``PlanTuner``/``TrainingPlanTuner`` (see
+``core/autotuner.py`` for the underlying greedy search) produce *tuned
+plans* rather than bare config dicts.
+
+A plan compiled with the default FP32 policy executes bit-identically to
+the pre-plan per-call path (regression-tested in tests/test_plan.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dataflows as df
+from repro.core import generator
+from repro.core import precision as prec
+from repro.core.autotuner import (Autotuner, TrainingAutotuner,
+                                  partition_groups)
+from repro.core.kmap import MapCache, build_kmap, transpose_kmap
+from repro.core.precision import FP32, PrecisionPolicy
+from repro.core.sparse_conv import (ConvSpec, TrainDataflowConfig, apply_conv)
+from repro.core.sparse_tensor import SparseTensor
+
+PLAN_VERSION = 2
+
+
+# ---------------------------------------------------------------------------
+# Shared layers: masked batch norm (+ ReLU)
+# ---------------------------------------------------------------------------
+
+def bn_relu_init(c: int) -> dict:
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def bn_relu(p, st: SparseTensor, relu: bool = True,
+            mode: str = "batch") -> SparseTensor:
+    """Masked batch norm (stats over valid rows) + ReLU.
+
+    ``mode="batch"`` (training/eval parity with the seed) normalizes with
+    statistics over all valid rows — which couples every row in a *batched*
+    tensor.  ``mode="affine"`` is the serving/inference mode: a per-channel
+    scale+bias only, so each row's output depends on that row alone and a
+    capacity-bucketed batched forward is bit-identical to the per-scene
+    forward (the serving engine's correctness contract).  It implements the
+    standard deploy-time convention of *folding* BN into an affine op: a
+    checkpoint exported for serving is expected to carry running statistics
+    pre-folded into ``scale``/``bias`` (this repo trains with batch stats
+    and keeps no running stats, so affine-mode outputs are not numerically
+    comparable to a ``mode="batch"`` forward of the same raw params).
+
+    Statistics are always computed in fp32; the result is cast back to the
+    feature dtype, so bf16 activations stay bf16 across the layer.
+    """
+    mask = st.valid_mask[:, None]
+    x = st.feats.astype(jnp.float32)
+    if mode == "affine":
+        y = x * p["scale"] + p["bias"]
+    else:
+        assert mode == "batch", mode
+        n = jnp.maximum(st.num_valid, 1).astype(jnp.float32)
+        mean = jnp.sum(jnp.where(mask, x, 0), axis=0) / n
+        var = jnp.sum(jnp.where(mask, jnp.square(x - mean), 0), axis=0) / n
+        y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    if relu:
+        y = jax.nn.relu(y)
+    return st.replace_feats(jnp.where(mask, y, 0).astype(st.feats.dtype))
+
+
+# ---------------------------------------------------------------------------
+# The IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One conv layer's slice of the compiled network plan.
+
+    map_ref:  key into the map dict built by the plan's ``KmapSpec`` program
+              (e.g. ``("sub", 4)``) — layers sharing a ref share the map.
+    sig:      map-sharing signature ``(stride, kernel, kind)`` — the tuner
+              groups layers by this (paper Fig. 12).
+    group:    tuner group name, filled by ``compile_plan``.
+    dataflow: decoupled fwd/dgrad/wgrad configs (paper Fig. 13).
+    precision: numeric policy threaded through all three dataflow kernels.
+    bn/relu:  whether the layer is followed by masked BN / ReLU.
+    """
+
+    name: str
+    spec: ConvSpec
+    map_ref: Tuple
+    sig: Tuple
+    group: str = ""
+    dataflow: TrainDataflowConfig = TrainDataflowConfig()
+    precision: PrecisionPolicy = FP32
+    bn: bool = True
+    relu: bool = True
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "spec": dataclasses.asdict(self.spec),
+                "map_ref": list(self.map_ref), "sig": list(self.sig),
+                "group": self.group, "dataflow": self.dataflow.to_dict(),
+                "precision": self.precision.to_dict(),
+                "bn": self.bn, "relu": self.relu}
+
+    @staticmethod
+    def from_dict(d: dict) -> "LayerPlan":
+        known = {f.name for f in dataclasses.fields(LayerPlan)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown LayerPlan fields: {sorted(unknown)}")
+        return LayerPlan(
+            name=d["name"], spec=ConvSpec(**d["spec"]),
+            map_ref=tuple(d["map_ref"]), sig=tuple(d["sig"]),
+            group=d.get("group", ""),
+            dataflow=TrainDataflowConfig.from_dict(d["dataflow"]),
+            precision=PrecisionPolicy.from_dict(d["precision"]),
+            bn=d.get("bn", True), relu=d.get("relu", True))
+
+
+@dataclasses.dataclass(frozen=True)
+class KmapSpec:
+    """One kernel-map build step, with explicit dependency edges.
+
+    kind:          "sub" (submanifold), "down" (strided), "up" (transposed).
+    tensor_stride: stride of the tensor the map is built on ("up": the fine
+                   tensor whose coordinates the inverse conv restores).
+    adopts_output_table: a "down" map's strided-unique pass emits the child
+                   level's sorted ``CoordTable`` for free; this edge makes
+                   the ``MapCache`` adoption — implicit call-order magic
+                   before this IR — part of the plan.
+    transpose_of:  for "up" maps, the forward map whose pair lists are
+                   swapped (decoder layers reuse encoder maps — same group).
+    """
+
+    ref: Tuple
+    kind: str
+    kernel_size: int
+    stride: int
+    tensor_stride: int
+    adopts_output_table: bool = False
+    transpose_of: Optional[Tuple] = None
+
+    def __post_init__(self):
+        assert self.kind in ("sub", "down", "up"), self.kind
+        if self.kind == "up":
+            assert self.transpose_of is not None
+
+    def to_dict(self) -> dict:
+        return {"ref": list(self.ref), "kind": self.kind,
+                "kernel_size": self.kernel_size, "stride": self.stride,
+                "tensor_stride": self.tensor_stride,
+                "adopts_output_table": self.adopts_output_table,
+                "transpose_of": (None if self.transpose_of is None
+                                 else list(self.transpose_of))}
+
+    @staticmethod
+    def from_dict(d: dict) -> "KmapSpec":
+        known = {f.name for f in dataclasses.fields(KmapSpec)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown KmapSpec fields: {sorted(unknown)}")
+        t = d.get("transpose_of")
+        return KmapSpec(ref=tuple(d["ref"]), kind=d["kind"],
+                        kernel_size=d["kernel_size"], stride=d["stride"],
+                        tensor_stride=d["tensor_stride"],
+                        adopts_output_table=d.get("adopts_output_table", False),
+                        transpose_of=None if t is None else tuple(t))
+
+
+#: Structural ops of the execution program.  ("conv", name) runs a LayerPlan;
+#: the rest wire skips/residuals/head exactly as the models' hand-written
+#: forwards did: push/concat implement U-Net skip connections as a stack,
+#: res_begin/res_end bracket a residual block, ("head", pname) is a final
+#: dense projection.  A program with no head op returns the last features.
+OPS = ("conv", "push", "concat", "res_begin", "res_end", "head")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDecl:
+    """What a model module declares: its layers, execution program, and
+    kernel-map program.  ``compile_plan`` turns this into a NetworkPlan."""
+
+    arch: str
+    layers: Tuple[LayerPlan, ...]
+    ops: Tuple[Tuple, ...]
+    map_specs: Tuple[KmapSpec, ...]
+
+
+def pyramid_map_specs(levels: int, with_up: bool,
+                      sub_kernel: int = 3, down_kernel: int = 2) -> Tuple[KmapSpec, ...]:
+    """The standard encoder(/decoder) map program: a submanifold map per
+    stride level, a strided map per downsample (adopting its output table),
+    and — for U-Nets — transposed maps reusing the forward strided maps."""
+    specs = [KmapSpec(("sub", 1), "sub", sub_kernel, 1, 1)]
+    stride = 1
+    for _ in range(levels):
+        specs.append(KmapSpec(("down", stride), "down", down_kernel, 2, stride,
+                              adopts_output_table=True))
+        stride *= 2
+        specs.append(KmapSpec(("sub", stride), "sub", sub_kernel, 1, stride))
+    if with_up:
+        for lvl in range(levels - 1, -1, -1):
+            s = 2 ** lvl
+            specs.append(KmapSpec(("up", s), "up", down_kernel, 2, s,
+                                  transpose_of=("down", s)))
+    return tuple(specs)
+
+
+def build_maps_from_specs(specs: Sequence[KmapSpec], st: SparseTensor,
+                          cache: Optional[MapCache] = None) -> dict:
+    """Execute a kernel-map program.  One ``MapCache`` spans the pyramid:
+    submanifold and strided maps at a stride share one sorted table, and
+    each ``adopts_output_table`` edge seeds the next level's table for free.
+    A caller-supplied warm ``cache`` (the serving engine) is used as-is;
+    never reuse one across ``jit`` traces."""
+    if cache is None:   # NOT `or`: an empty caller cache is falsy but wanted
+        cache = MapCache.for_tensor(st)
+    maps: dict = {}
+    tensors = {st.stride: st}
+    for ms in specs:
+        cur = tensors[ms.tensor_stride]
+        if ms.kind == "sub":
+            maps[ms.ref] = build_kmap(cur, ms.kernel_size, 1, cache=cache)
+        elif ms.kind == "down":
+            kd = build_kmap(cur, ms.kernel_size, ms.stride, cache=cache)
+            maps[ms.ref] = kd
+            tensors[kd.out_stride] = SparseTensor(
+                coords=kd.out_coords,
+                feats=jnp.zeros((kd.capacity, 1), st.feats.dtype),
+                num_valid=kd.n_out, stride=kd.out_stride,
+                batch_bound=st.batch_bound, spatial_bound=st.spatial_bound)
+        else:  # "up"
+            maps[ms.ref] = transpose_kmap(maps[ms.transpose_of], cur)
+    return maps
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    """The compiled, serializable execution plan of one sparse network."""
+
+    arch: str
+    layers: Tuple[LayerPlan, ...]
+    ops: Tuple[Tuple, ...]
+    map_specs: Tuple[KmapSpec, ...]
+    version: int = PLAN_VERSION
+
+    # ------------------------------------------------------------ structure
+    def layer(self, name: str) -> LayerPlan:
+        for lp in self.layers:
+            if lp.name == name:
+                return lp
+        raise KeyError(name)
+
+    def signatures(self) -> Dict[str, tuple]:
+        return {lp.name: lp.sig for lp in self.layers}
+
+    def groups(self) -> list:
+        """Tuner groups (``GroupInfo``) over this plan's layers."""
+        return partition_groups(self.signatures())
+
+    def assignment(self) -> Dict[tuple, TrainDataflowConfig]:
+        """Per-signature dataflow assignment (layers in a group share one)."""
+        out: Dict[tuple, TrainDataflowConfig] = {}
+        for lp in self.layers:
+            out.setdefault(lp.sig, lp.dataflow)
+        return out
+
+    # ----------------------------------------------------------- rebinding
+    def with_assignment(self, assignment: Dict[tuple, TrainDataflowConfig]
+                        ) -> "NetworkPlan":
+        """Rebind per-group dataflow configs (tuner output → plan)."""
+        layers = tuple(dataclasses.replace(lp, dataflow=assignment[lp.sig])
+                       if lp.sig in assignment else lp for lp in self.layers)
+        return dataclasses.replace(self, layers=layers)
+
+    def with_precision(self, policy) -> "NetworkPlan":
+        """Rebind the numeric policy: one policy for the whole network, or a
+        ``{sig: policy}`` dict for per-group mixes."""
+        if isinstance(policy, dict):
+            layers = tuple(dataclasses.replace(lp, precision=prec.resolve(policy[lp.sig]))
+                           if lp.sig in policy else lp for lp in self.layers)
+        else:
+            pol = prec.resolve(policy)
+            layers = tuple(dataclasses.replace(lp, precision=pol)
+                           for lp in self.layers)
+        return dataclasses.replace(self, layers=layers)
+
+    def resolve_tiles(self, maps: dict,
+                      threshold_macs: float = 5e8) -> "NetworkPlan":
+        """Adaptive tiling (paper §6.2): once real kernel maps exist, pick
+        each implicit-GEMM layer's (tile_m, tile_n) by its effective MACs
+        via ``generator.adaptive_tiles``.  Tile sizes only matter to the
+        Pallas backend's launch geometry — the math is unchanged."""
+        def retile(cfg: df.DataflowConfig, kmap, cin, cout):
+            if cfg.dataflow != "implicit_gemm":
+                return cfg
+            tm, tn = generator.adaptive_tiles(kmap, cin, cout,
+                                              threshold_macs=threshold_macs)
+            return dataclasses.replace(cfg, tile_m=tm, tile_n=tn)
+
+        layers = []
+        for lp in self.layers:
+            kmap = maps[lp.map_ref]
+            cin, cout = lp.spec.in_channels, lp.spec.out_channels
+            cfg3 = TrainDataflowConfig(
+                fwd=retile(lp.dataflow.fwd, kmap, cin, cout),
+                dgrad=retile(lp.dataflow.dgrad, kmap, cout, cin),
+                wgrad=retile(lp.dataflow.wgrad, kmap, cin, cout))
+            layers.append(dataclasses.replace(lp, dataflow=cfg3))
+        return dataclasses.replace(self, layers=tuple(layers))
+
+    # ----------------------------------------------------------- execution
+    def cast_params(self, params: dict) -> dict:
+        """Cast each conv layer's parameter leaves to its LayerPlan's
+        declared storage dtype (``PrecisionPolicy.params``); BN/head params
+        are left untouched (normalization statistics and the final
+        projection stay fp32 under the mixed policies).  The single home
+        for the bench/example/test param-casting rule."""
+        out = dict(params)
+        for lp in self.layers:
+            out[lp.name] = {k: lp.precision.cast_param(v)
+                            for k, v in params[lp.name].items()}
+        return out
+
+    def build_maps(self, st: SparseTensor,
+                   cache: Optional[MapCache] = None) -> dict:
+        return build_maps_from_specs(self.map_specs, st, cache)
+
+    def apply(self, params: dict, st: SparseTensor,
+              maps: Optional[dict] = None, bn_mode: str = "batch") -> jax.Array:
+        """Run the compiled program.  Bit-identical to the models'
+        pre-plan hand-written forwards under the FP32 policy."""
+        if maps is None:
+            maps = self.build_maps(st)
+        by_name = {lp.name: lp for lp in self.layers}
+        x = st
+        skips: list = []
+        resid: list = []
+        for op in self.ops:
+            kind = op[0]
+            if kind == "conv":
+                lp = by_name[op[1]]
+                x = apply_conv(params[lp.name], x, maps[lp.map_ref],
+                               lp.dataflow, precision=lp.precision)
+                if lp.bn:
+                    x = bn_relu(params[f"{lp.name}_bn"], x, relu=lp.relu,
+                                mode=bn_mode)
+            elif kind == "push":
+                skips.append(x)
+            elif kind == "concat":
+                skip = skips.pop()
+                x = x.replace_feats(jnp.concatenate([x.feats, skip.feats],
+                                                    axis=1))
+            elif kind == "res_begin":
+                resid.append(x.feats)
+            elif kind == "res_end":
+                idn = resid.pop()
+                y = jax.nn.relu(x.feats +
+                                (idn if idn.shape == x.feats.shape else 0))
+                x = x.replace_feats(jnp.where(x.valid_mask[:, None], y, 0))
+            elif kind == "head":
+                return x.feats @ params[op[1]]["w"]
+            else:
+                raise ValueError(f"unknown plan op {op!r}")
+        return x.feats
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {"version": self.version, "arch": self.arch,
+                "layers": [lp.to_dict() for lp in self.layers],
+                "ops": [list(op) for op in self.ops],
+                "map_specs": [ms.to_dict() for ms in self.map_specs]}
+
+    @staticmethod
+    def from_dict(d: dict) -> "NetworkPlan":
+        version = d.get("version", PLAN_VERSION)
+        if version != PLAN_VERSION:
+            raise ValueError(f"unsupported NetworkPlan version {version!r} "
+                             f"(expected {PLAN_VERSION})")
+        known = {"version", "arch", "layers", "ops", "map_specs"}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown NetworkPlan fields: {sorted(unknown)}")
+        return NetworkPlan(
+            arch=d["arch"],
+            layers=tuple(LayerPlan.from_dict(x) for x in d["layers"]),
+            ops=tuple(tuple(op) for op in d["ops"]),
+            map_specs=tuple(KmapSpec.from_dict(x) for x in d["map_specs"]))
+
+
+# ---------------------------------------------------------------------------
+# The compiler
+# ---------------------------------------------------------------------------
+
+def compile_plan(decl: ModelDecl,
+                 assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None,
+                 precision=None) -> NetworkPlan:
+    """Compile a model declaration into a NetworkPlan.
+
+    Partitions the tuner groups from the layers' map-sharing signatures
+    (paper Fig. 12), binds the per-group dataflow ``assignment`` (missing
+    groups keep the declaration's default), and binds the numeric policy
+    (one policy, a ``{sig: policy}`` dict, or None to keep per-layer
+    declarations).  Tile resolution (``resolve_tiles``) is a separate step
+    because it needs real kernel maps.
+    """
+    sigs = {lp.name: lp.sig for lp in decl.layers}
+    groups = partition_groups(sigs)
+    group_of = {name: g.name for g in groups for name in g.layer_names}
+    assignment = assignment or {}
+    layers = []
+    for lp in decl.layers:
+        lp = dataclasses.replace(lp, group=group_of[lp.name])
+        if lp.sig in assignment:
+            lp = dataclasses.replace(lp, dataflow=assignment[lp.sig])
+        layers.append(lp)
+    nplan = NetworkPlan(arch=decl.arch, layers=tuple(layers), ops=decl.ops,
+                        map_specs=decl.map_specs)
+    if precision is not None:
+        nplan = nplan.with_precision(precision)
+    return nplan
+
+
+# ---------------------------------------------------------------------------
+# Plan-producing tuners (paper §4 on top of the IR)
+# ---------------------------------------------------------------------------
+
+class PlanTuner:
+    """Greedy group tuner that produces a *tuned NetworkPlan*.
+
+    ``measure(candidate_plan)`` must return end-to-end latency (seconds) of
+    the workload executed under the candidate plan — never per-kernel time
+    (paper Tables 3 vs 4).  Inference binding: all three kernels share the
+    group's config (``bind_all``).
+    """
+
+    def __init__(self, nplan: NetworkPlan, space: Sequence[df.DataflowConfig],
+                 measure: Callable[[NetworkPlan], float]):
+        self.nplan = nplan
+        self.space = list(space)
+        self.measure = measure
+        self.groups = nplan.groups()
+        self.sig_of = {g.name: nplan.layer(g.layer_names[0]).sig
+                       for g in self.groups}
+        self.log: list = []
+
+    def _plan_for(self, assign: Dict[str, df.DataflowConfig]) -> NetworkPlan:
+        amap = {self.sig_of[k]: TrainDataflowConfig.bind_all(v)
+                for k, v in assign.items()}
+        return self.nplan.with_assignment(amap)
+
+    def tune(self) -> NetworkPlan:
+        tuner = Autotuner(self.groups, self.space,
+                          lambda assign: self.measure(self._plan_for(assign)))
+        best = tuner.tune()
+        self.log = tuner.log
+        return self._plan_for(best)
+
+
+class TrainingPlanTuner:
+    """Two-pass training tuner (partial binding, paper Fig. 13) over plans.
+
+    ``measure(candidate_plan)`` returns end-to-end train-step latency of the
+    candidate.  Returns a plan whose layers carry decoupled fwd/dgrad/wgrad
+    configs per group.
+    """
+
+    def __init__(self, nplan: NetworkPlan, space: Sequence[df.DataflowConfig],
+                 measure: Callable[[NetworkPlan], float],
+                 scheme: str = "bind_dgrad_wgrad"):
+        self.nplan = nplan
+        self.space = list(space)
+        self.measure = measure
+        self.scheme = scheme
+        groups = nplan.groups()
+        self.sig_of = {g.name: nplan.layer(g.layer_names[0]).sig
+                       for g in groups}
+        self._tuner = TrainingAutotuner(groups, self.space, self._measure,
+                                        scheme=scheme)
+
+    def _measure(self, assign3: Dict[str, TrainDataflowConfig]) -> float:
+        amap = {self.sig_of[k]: v for k, v in assign3.items()}
+        return self.measure(self.nplan.with_assignment(amap))
+
+    def tune(self) -> NetworkPlan:
+        best = self._tuner.tune()
+        amap = {self.sig_of[k]: v for k, v in best.items()}
+        return self.nplan.with_assignment(amap)

@@ -1,0 +1,155 @@
+"""Mixed-precision policies for the sparse-conv execution stack.
+
+TorchSparse++'s largest training wins over SpConv v2 (1.2-1.3x, paper §5)
+come from mixed-precision (fp16/bf16) kernels.  On the TPU/Mosaic stack the
+native half type is bfloat16, and the profitable recipe is the standard one:
+
+* **compute** in bf16 — GEMM operands (gathered feature rows and the per-δ
+  weight slices) are cast down before the MXU dot;
+* **accumulate** in fp32 — every dataflow's output/grad accumulator and the
+  ``jnp.dot(..., preferred_element_type=...)`` stay full precision, so Σ_δ
+  partial sums don't round at every offset;
+* **master weights** in fp32 — the optimizer (``train/optimizer.py``) keeps
+  an fp32 copy of bf16 params and re-derives the working copy each step,
+  so tiny updates aren't lost to bf16 quantization.
+
+A ``PrecisionPolicy`` is carried per layer by the execution-plan IR
+(``core/plan.py``) and threaded through all three dataflows of the
+``sparse_conv_apply`` custom_vjp — fwd, dgrad and wgrad each honour it.
+The default ``FP32`` policy reproduces the seed behaviour bit for bit
+(fp32 compute/accum, output in the input's dtype).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-layer(-group) numeric policy for the sparse-conv kernels.
+
+    compute: dtype GEMM operands are cast to ("float32" | "bfloat16").
+    accum:   accumulator / partial-sum dtype (fp32 for both policies — the
+             paper's mixed-precision kernels accumulate full precision).
+    output:  dtype of the kernel result; "" means "same as the input
+             features' dtype" (the seed contract, and what keeps fp32
+             plans bit-identical to the pre-plan path).
+    params:  storage dtype for conv parameters ("" = leave unchanged).
+             ``BF16`` stores a bf16 working copy (halved weight traffic on
+             accelerators); ``BF16_AMP`` leaves params fp32 and rounds at
+             the GEMM boundary instead (autocast convention).
+    master_weights: the optimizer should keep an fp32 master copy of the
+             (bf16-stored) parameters; consumed by ``train/optimizer.py``.
+             Policies with fp32 param storage don't need one — the params
+             are their own master.
+    """
+
+    compute: str = "float32"
+    accum: str = "float32"
+    output: str = ""
+    params: str = ""
+    master_weights: bool = False
+
+    def __post_init__(self):
+        for f in ("compute", "accum"):
+            jnp.dtype(getattr(self, f))  # raises on unknown dtype names
+        for f in ("output", "params"):
+            if getattr(self, f):
+                jnp.dtype(getattr(self, f))
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.compute)
+
+    @property
+    def accum_dtype(self):
+        return jnp.dtype(self.accum)
+
+    def output_dtype(self, like):
+        """Result dtype for a kernel whose input features are ``like``."""
+        return jnp.dtype(self.output) if self.output else jnp.dtype(like)
+
+    def cast_param(self, p):
+        """Cast one parameter leaf to the declared storage dtype (bf16
+        working copy under the BF16 policy; identity when ``params`` is
+        unset — FP32 and the autocast-style BF16_AMP)."""
+        if not self.params:
+            return p
+        t = jnp.dtype(self.params)
+        return p.astype(t) if p.dtype != t \
+            and jnp.issubdtype(p.dtype, jnp.floating) else p
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "PrecisionPolicy":
+        unknown = set(d) - {f.name for f in dataclasses.fields(PrecisionPolicy)}
+        if unknown:
+            raise ValueError(f"unknown PrecisionPolicy fields: {sorted(unknown)}")
+        return PrecisionPolicy(**d)
+
+
+def gemm_operand(a, compute_dtype, accum_dtype):
+    """Round a GEMM operand to the compute dtype, then pick the fastest
+    *numerically identical* carrier for the actual dot.
+
+    bf16×bf16→f32 on the MXU multiplies bf16-rounded operands and
+    accumulates fp32.  Products of bf16-rounded values are **exact** in
+    fp32 (8-bit mantissas square into 16), so rounding the operands to bf16
+    and running the dot in fp32 produces bit-identical results to a native
+    bf16 GEMM with an fp32 accumulator.  XLA:CPU has no fast bf16 GEMM
+    (bf16 dots fall off the Eigen path onto a naive emitter, ~0.6x), so on
+    CPU we upcast the already-rounded operands and let Eigen run; on TPU
+    the operands stay bf16 and Mosaic drives the MXU natively.
+    """
+    ct, at = jnp.dtype(compute_dtype), jnp.dtype(accum_dtype)
+    a = a.astype(ct)
+    if ct != at and jax.default_backend() == "cpu":
+        a = a.astype(at)
+    return a
+
+
+#: Seed-identical full-precision policy (the default everywhere).
+FP32 = PrecisionPolicy()
+
+#: The paper's mixed-precision training recipe for accelerators: bf16
+#: compute AND storage (params/activations — halved HBM traffic, native
+#: MXU), fp32 accumulate, fp32 master weights in the optimizer.
+BF16 = PrecisionPolicy(compute="bfloat16", output="bfloat16",
+                       params="bfloat16", master_weights=True)
+
+#: Autocast-style mixed precision: GEMM operands are rounded to bf16 at the
+#: kernel boundary (same bf16-compute / fp32-accumulate numerics as the
+#: MXU) but params/activations stay fp32 — the right recipe on backends
+#: without bf16 execution units, where bf16 *storage* only buys emulated
+#: elementwise ops and conversion traffic.  The fp32 params double as the
+#: master copy, so no separate master tree is needed.
+BF16_AMP = PrecisionPolicy(compute="bfloat16")
+
+POLICIES = {"fp32": FP32, "bf16": BF16, "bf16_amp": BF16_AMP}
+
+
+def bf16_training_policy(backend: str = None) -> PrecisionPolicy:
+    """The bf16 training recipe best suited to a backend: full bf16 storage
+    on accelerators, autocast-style on CPU."""
+    backend = backend or jax.default_backend()
+    return BF16_AMP if backend == "cpu" else BF16
+
+
+def resolve(policy) -> PrecisionPolicy:
+    """Accept a PrecisionPolicy, a name ("fp32"/"bf16"), or None (FP32)."""
+    if policy is None:
+        return FP32
+    if isinstance(policy, PrecisionPolicy):
+        return policy
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]
+        except KeyError:
+            raise ValueError(f"unknown precision policy {policy!r}; "
+                             f"have {sorted(POLICIES)}") from None
+    raise TypeError(f"cannot resolve precision policy from {type(policy)}")

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import dataflows as df
 from repro.core.kmap import KernelMap, MapCache, build_kmap, transpose_kmap
+from repro.core.precision import FP32, PrecisionPolicy
 from repro.core.sparse_tensor import SparseTensor
 
 
@@ -48,6 +49,10 @@ class TrainDataflowConfig:
 
     @staticmethod
     def from_dict(d: dict) -> "TrainDataflowConfig":
+        unknown = set(d) - {"fwd", "dgrad", "wgrad"}
+        if unknown:
+            raise ValueError(
+                f"unknown TrainDataflowConfig fields: {sorted(unknown)}")
         return TrainDataflowConfig(fwd=df.DataflowConfig.from_dict(d["fwd"]),
                                    dgrad=df.DataflowConfig.from_dict(d["dgrad"]),
                                    wgrad=df.DataflowConfig.from_dict(d["wgrad"]))
@@ -57,12 +62,20 @@ DEFAULT_TRAIN_CONFIG = TrainDataflowConfig()
 
 
 def sparse_conv_apply(feats: jax.Array, w: jax.Array, kmap: KernelMap,
-                      cfg: TrainDataflowConfig = DEFAULT_TRAIN_CONFIG) -> jax.Array:
-    """Differentiable sparse conv with decoupled fwd/dgrad/wgrad dataflows."""
+                      cfg: TrainDataflowConfig = DEFAULT_TRAIN_CONFIG,
+                      precision: PrecisionPolicy = FP32) -> jax.Array:
+    """Differentiable sparse conv with decoupled fwd/dgrad/wgrad dataflows.
+
+    ``precision`` applies to all three kernels: bf16 compute / fp32
+    accumulate under the mixed policy.  Cotangents are re-cast to the primal
+    dtypes as the last step (custom_vjp contract), so the weight gradient
+    rounds at most once — after full-precision accumulation — on its way to
+    the optimizer's fp32 master copy."""
 
     @jax.custom_vjp
     def f(feats, w):
-        return df.sparse_conv_forward(feats, w, kmap, cfg.fwd)
+        return df.sparse_conv_forward(feats, w, kmap, cfg.fwd,
+                                      precision=precision)
 
     def f_fwd(feats, w):
         return f(feats, w), (feats, w)
@@ -70,9 +83,11 @@ def sparse_conv_apply(feats: jax.Array, w: jax.Array, kmap: KernelMap,
     def f_bwd(res, dy):
         feats_, w_ = res
         dx = df.sparse_conv_dgrad(dy, w_, kmap, cfg.dgrad,
-                                  in_capacity=feats_.shape[0])
-        dw = df.sparse_conv_wgrad(feats_, dy, kmap, cfg.wgrad)
-        return dx, dw
+                                  in_capacity=feats_.shape[0],
+                                  precision=precision)
+        dw = df.sparse_conv_wgrad(feats_, dy, kmap, cfg.wgrad,
+                                  precision=precision)
+        return dx.astype(feats_.dtype), dw.astype(w_.dtype)
 
     f.defvjp(f_fwd, f_bwd)
     return f(feats, w)
@@ -103,12 +118,13 @@ def init_conv(key: jax.Array, spec: ConvSpec, ndim: int = 3, dtype=jnp.float32) 
 
 
 def apply_conv(params: dict, x: SparseTensor, kmap: KernelMap,
-               cfg: TrainDataflowConfig = DEFAULT_TRAIN_CONFIG) -> SparseTensor:
+               cfg: TrainDataflowConfig = DEFAULT_TRAIN_CONFIG,
+               precision: PrecisionPolicy = FP32) -> SparseTensor:
     """Apply a sparse conv given a prebuilt kernel map; returns the output
     SparseTensor on the map's coordinates."""
-    y = sparse_conv_apply(x.feats, params["w"], kmap, cfg)
+    y = sparse_conv_apply(x.feats, params["w"], kmap, cfg, precision=precision)
     if "b" in params:
-        y = y + params["b"][None, :]
+        y = y + params["b"][None, :].astype(y.dtype)
     valid = jnp.arange(kmap.capacity) < kmap.n_out
     y = jnp.where(valid[:, None], y, 0)
     # Output coordinates live in the same declared (batch, spatial) region as

@@ -12,17 +12,27 @@ import jax.numpy as jnp
 
 def fetch_on_demand_ref(x: jax.Array, w: jax.Array, ws_in: jax.Array,
                         ws_out: jax.Array, n_out: int,
-                        acc_dtype=jnp.float32) -> jax.Array:
+                        acc_dtype=jnp.float32, compute_dtype=None,
+                        out_dtype=None) -> jax.Array:
     """x: (N_in, Cin); w: (KD, Cin, Cout); ws_in/ws_out: (KD, cap) int32
-    compacted pair lists (-1 padded) → (n_out, Cout)."""
+    compacted pair lists (-1 padded) → (n_out, Cout).
+
+    ``compute_dtype`` (default ``acc_dtype``) is the GEMM operand dtype;
+    scatter-adds accumulate in ``acc_dtype``; ``out_dtype`` defaults to
+    ``x.dtype``."""
+    from repro.core.precision import gemm_operand
+
     kd = w.shape[0]
+    ct = acc_dtype if compute_dtype is None else compute_dtype
+    # round/cast the loop-invariant operands once, not per δ iteration
+    xq, wq = gemm_operand(x, ct, acc_dtype), gemm_operand(w, ct, acc_dtype)
 
     def body(acc, k):
         i_in, i_out = ws_in[k], ws_out[k]
-        rows = jnp.where((i_in >= 0)[:, None], x[jnp.clip(i_in, 0)], 0).astype(acc_dtype)
-        y = rows @ w[k].astype(acc_dtype)
+        rows = jnp.where((i_in >= 0)[:, None], xq[jnp.clip(i_in, 0)], 0)
+        y = jnp.dot(rows, wq[k], preferred_element_type=acc_dtype)
         return acc.at[i_out].add(y, mode="drop"), None
 
     acc0 = jnp.zeros((n_out, w.shape[-1]), acc_dtype)
     acc, _ = jax.lax.scan(body, acc0, jnp.arange(kd))
-    return acc.astype(x.dtype)
+    return acc.astype(x.dtype if out_dtype is None else out_dtype)

@@ -12,16 +12,27 @@ import jax.numpy as jnp
 
 
 def implicit_gemm_ref(x: jax.Array, w: jax.Array, m: jax.Array,
-                      acc_dtype=jnp.float32) -> jax.Array:
-    """x: (N_in, Cin); w: (KD, Cin, Cout); m: (N_out, KD) int32 → (N_out, Cout)."""
+                      acc_dtype=jnp.float32, compute_dtype=None,
+                      out_dtype=None) -> jax.Array:
+    """x: (N_in, Cin); w: (KD, Cin, Cout); m: (N_out, KD) int32 → (N_out, Cout).
+
+    ``compute_dtype`` (default: ``acc_dtype``) is the GEMM operand dtype —
+    bf16 under the mixed-precision policy — while partial sums always
+    accumulate in ``acc_dtype``.  ``out_dtype`` defaults to ``x.dtype``."""
+    from repro.core.precision import gemm_operand
+
     n_out, kd = m.shape
     cout = w.shape[-1]
+    ct = acc_dtype if compute_dtype is None else compute_dtype
+    # round/cast the loop-invariant operands once, not per δ iteration
+    xq, wq = gemm_operand(x, ct, acc_dtype), gemm_operand(w, ct, acc_dtype)
 
     def body(acc, k):
         idx = m[:, k]
-        rows = jnp.where((idx >= 0)[:, None], x[jnp.clip(idx, 0)], 0)
-        return acc + jnp.dot(rows.astype(acc_dtype), w[k].astype(acc_dtype)), None
+        rows = jnp.where((idx >= 0)[:, None], xq[jnp.clip(idx, 0)], 0)
+        return acc + jnp.dot(rows, wq[k],
+                             preferred_element_type=acc_dtype), None
 
     acc0 = jnp.zeros((n_out, cout), acc_dtype)
     acc, _ = jax.lax.scan(body, acc0, jnp.arange(kd))
-    return acc.astype(x.dtype)
+    return acc.astype(x.dtype if out_dtype is None else out_dtype)

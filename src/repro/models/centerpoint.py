@@ -4,6 +4,10 @@ The paper's detection workload (Waymo/nuScenes-CenterPoint).  Only the
 SparseConv layers are timed in the paper's detection benchmarks, so this is
 the backbone alone: 4 stages of [stride-2 conv + submanifold convs],
 channel ladder 16→32→64→128.
+
+Like MinkUNet, the backbone declares its layers (``declare``) and executes
+through a compiled ``core.plan.NetworkPlan``; ``apply``/``build_maps``
+keep the historical signatures and bit-exact outputs.
 """
 from __future__ import annotations
 
@@ -11,12 +15,14 @@ import dataclasses
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.kmap import MapCache, build_kmap
-from repro.core.sparse_conv import ConvSpec, TrainDataflowConfig, apply_conv, init_conv
+from repro.core import plan as planlib
+from repro.core.kmap import MapCache
+from repro.core.plan import (LayerPlan, ModelDecl, NetworkPlan, compile_plan,
+                             pyramid_map_specs)
+from repro.core.sparse_conv import ConvSpec, TrainDataflowConfig, init_conv
 from repro.core.sparse_tensor import SparseTensor
-from repro.models.minkunet import _bn_relu, _bn_relu_init
+from repro.models.minkunet import _bn_relu, _bn_relu_init  # noqa: F401 (re-export)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,75 +39,62 @@ class CenterPointConfig:
 def init_params(cfg: CenterPointConfig, key) -> dict:
     keys = iter(jax.random.split(key, 64))
     p = {}
-    c0 = cfg.ch(cfg.channels[0])
-    p["stem"] = init_conv(next(keys), ConvSpec(cfg.in_channels, c0, 3))
-    p["stem_bn"] = _bn_relu_init(c0)
-    cin = c0
-    for i, c in enumerate(cfg.channels):
-        c = cfg.ch(c)
-        p[f"down{i}"] = init_conv(next(keys), ConvSpec(cin, c, 2, stride=2))
-        p[f"down{i}_bn"] = _bn_relu_init(c)
-        for b in range(cfg.sub_convs_per_stage):
-            p[f"sub{i}_{b}"] = init_conv(next(keys), ConvSpec(c, c, 3))
-            p[f"sub{i}_{b}_bn"] = _bn_relu_init(c)
-        cin = c
+    for lp in declare(cfg).layers:
+        p[lp.name] = init_conv(next(keys), lp.spec)
+        p[f"{lp.name}_bn"] = _bn_relu_init(lp.spec.out_channels)
     return p
 
 
-def layer_signatures(cfg: CenterPointConfig) -> Dict[str, tuple]:
-    sigs = {"stem": (1, 3, "sub")}
-    for i in range(len(cfg.channels)):
-        sigs[f"down{i}"] = (2 ** i, 2, "down")
+def declare(cfg: CenterPointConfig) -> ModelDecl:
+    """Layer list + execution program + kernel-map program (see core.plan)."""
+    c0 = cfg.ch(cfg.channels[0])
+    layers = [LayerPlan("stem", ConvSpec(cfg.in_channels, c0, 3),
+                        ("sub", 1), (1, 3, "sub"))]
+    ops = [("conv", "stem")]
+    cin, stride = c0, 1
+    for i, c in enumerate(cfg.channels):
+        c = cfg.ch(c)
+        layers.append(LayerPlan(f"down{i}", ConvSpec(cin, c, 2, stride=2),
+                                ("down", stride), (stride, 2, "down")))
+        ops.append(("conv", f"down{i}"))
+        stride *= 2
         for b in range(cfg.sub_convs_per_stage):
-            sigs[f"sub{i}_{b}"] = (2 ** (i + 1), 3, "sub")
-    return sigs
+            layers.append(LayerPlan(f"sub{i}_{b}", ConvSpec(c, c, 3),
+                                    ("sub", stride), (stride, 3, "sub")))
+            ops.append(("conv", f"sub{i}_{b}"))
+        cin = c
+    return ModelDecl(arch="centerpoint", layers=tuple(layers), ops=tuple(ops),
+                     map_specs=pyramid_map_specs(len(cfg.channels),
+                                                 with_up=False))
 
 
-def build_maps(st: SparseTensor, engine: str = "packed",
-               cache: Optional[MapCache] = None) -> dict:
+def network_plan(cfg: CenterPointConfig,
+                 assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None,
+                 precision=None) -> NetworkPlan:
+    """Compile the execution plan: declare → compile (→ tune → persist)."""
+    return compile_plan(declare(cfg), assignment=assignment, precision=precision)
+
+
+def layer_signatures(cfg: CenterPointConfig) -> Dict[str, tuple]:
+    return {lp.name: lp.sig for lp in declare(cfg).layers}
+
+
+def build_maps(st: SparseTensor, cache: Optional[MapCache] = None) -> dict:
     """One ``MapCache`` across the stage ladder: the stem/submanifold and
     strided convs at each stride share a sorted coordinate table, and each
-    downsample adopts its output table for the next stage.  A prebuilt warm
-    ``cache`` may be passed (serving engine); never reuse one across ``jit``
-    traces.
-
-    ``engine="legacy"`` rebuilds every table per layer with the seed path —
-    only for the benchmark A/B (benchmarks/bench_kmap.py); goes away with
-    the legacy engine."""
-    if cache is None:
-        cache = MapCache.for_tensor(st) if engine == "packed" else None
-    maps = {("sub", 1): build_kmap(st, 3, 1, cache=cache, engine=engine)}
-    cur, stride = st, 1
-    for i in range(4):
-        kd = build_kmap(cur, 2, 2, cache=cache, engine=engine)
-        maps[("down", stride)] = kd
-        cur = SparseTensor(coords=kd.out_coords,
-                           feats=jnp.zeros((kd.capacity, 1), st.feats.dtype),
-                           num_valid=kd.n_out, stride=kd.out_stride,
-                           batch_bound=st.batch_bound, spatial_bound=st.spatial_bound)
-        stride *= 2
-        maps[("sub", stride)] = build_kmap(cur, 3, 1, cache=cache, engine=engine)
-    return maps
+    downsample's declared ``adopts_output_table`` edge seeds the next
+    stage's table for free.  A prebuilt warm ``cache`` may be passed
+    (serving engine); never reuse one across ``jit`` traces."""
+    return planlib.build_maps_from_specs(pyramid_map_specs(4, with_up=False),
+                                         st, cache)
 
 
 def apply(params, st: SparseTensor, cfg: CenterPointConfig,
           maps: Optional[dict] = None,
           assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None,
-          bn_mode: str = "batch") -> jax.Array:
-    maps = maps or build_maps(st)
-    assignment = assignment or {}
-
-    def cfg_for(sig):
-        return assignment.get(sig, TrainDataflowConfig())
-
-    x = apply_conv(params["stem"], st, maps[("sub", 1)], cfg_for((1, 3, "sub")))
-    x = _bn_relu(params["stem_bn"], x, mode=bn_mode)
-    stride = 1
-    for i in range(len(cfg.channels)):
-        x = apply_conv(params[f"down{i}"], x, maps[("down", stride)], cfg_for((stride, 2, "down")))
-        x = _bn_relu(params[f"down{i}_bn"], x, mode=bn_mode)
-        stride *= 2
-        for b in range(cfg.sub_convs_per_stage):
-            x = apply_conv(params[f"sub{i}_{b}"], x, maps[("sub", stride)], cfg_for((stride, 3, "sub")))
-            x = _bn_relu(params[f"sub{i}_{b}_bn"], x, mode=bn_mode)
-    return x.feats
+          bn_mode: str = "batch",
+          nplan: Optional[NetworkPlan] = None,
+          precision=None) -> jax.Array:
+    if nplan is None:
+        nplan = network_plan(cfg, assignment=assignment, precision=precision)
+    return nplan.apply(params, st, maps, bn_mode=bn_mode)

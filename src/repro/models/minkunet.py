@@ -5,9 +5,13 @@ Structure (MinkUNet18-ish, width-scalable): stem → 4 encoder stages
 (stride-2 conv + residual submanifold blocks) → 4 decoder stages
 (transposed conv reusing the encoder's kernel map + skip concat + blocks).
 
-Layer *groups* (paper Fig. 12) fall out naturally: every submanifold conv at
+The model *declares* its layers (``declare`` → ``core.plan.ModelDecl``) and
+executes through a compiled ``NetworkPlan``: layer *groups* (paper Fig. 12)
+fall out of the declared map-sharing signatures — every submanifold conv at
 one stride shares a kernel map; each down/up-sample pair shares the strided
-map.  The per-group DataflowConfig dict is what the Sparse Autotuner tunes.
+map — and the Sparse Autotuner rebinds the plan's per-group
+``TrainDataflowConfig``s.  ``apply``/``build_maps`` keep the pre-plan
+call signatures (and bit-exact outputs) for existing callers.
 """
 from __future__ import annotations
 
@@ -15,13 +19,18 @@ import dataclasses
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import dataflows as df
-from repro.core.kmap import KernelMap, MapCache, build_kmap, transpose_kmap
-from repro.core.sparse_conv import (ConvSpec, TrainDataflowConfig, apply_conv,
-                                    init_conv)
+from repro.core import plan as planlib
+from repro.core.kmap import MapCache
+from repro.core.plan import (KmapSpec, LayerPlan, ModelDecl, NetworkPlan,
+                             compile_plan, pyramid_map_specs)
+from repro.core.sparse_conv import ConvSpec, TrainDataflowConfig, init_conv
 from repro.core.sparse_tensor import SparseTensor
+
+# Shared masked-BN(+ReLU) now lives with the plan executor; these aliases
+# keep the historical names importable (centerpoint, tests).
+_bn_relu = planlib.bn_relu
+_bn_relu_init = planlib.bn_relu_init
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,179 +46,106 @@ class MinkUNetConfig:
         return max(8, int(c * self.width))
 
 
-def _bn_relu_init(c: int):
-    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
-
-
-def _bn_relu(p, st: SparseTensor, relu: bool = True,
-             mode: str = "batch") -> SparseTensor:
-    """Masked batch norm (stats over valid rows) + ReLU.
-
-    ``mode="batch"`` (training/eval parity with the seed) normalizes with
-    statistics over all valid rows — which couples every row in a *batched*
-    tensor.  ``mode="affine"`` is the serving/inference mode: a per-channel
-    scale+bias only, so each row's output depends on that row alone and a
-    capacity-bucketed batched forward is bit-identical to the per-scene
-    forward (the serving engine's correctness contract).  It implements the
-    standard deploy-time convention of *folding* BN into an affine op: a
-    checkpoint exported for serving is expected to carry running statistics
-    pre-folded into ``scale``/``bias`` (this repo trains with batch stats
-    and keeps no running stats, so affine-mode outputs are not numerically
-    comparable to a ``mode="batch"`` forward of the same raw params).
-    """
-    mask = st.valid_mask[:, None]
-    x = st.feats.astype(jnp.float32)
-    if mode == "affine":
-        y = x * p["scale"] + p["bias"]
-    else:
-        assert mode == "batch", mode
-        n = jnp.maximum(st.num_valid, 1).astype(jnp.float32)
-        mean = jnp.sum(jnp.where(mask, x, 0), axis=0) / n
-        var = jnp.sum(jnp.where(mask, jnp.square(x - mean), 0), axis=0) / n
-        y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
-    if relu:
-        y = jax.nn.relu(y)
-    return st.replace_feats(jnp.where(mask, y, 0).astype(st.feats.dtype))
-
-
 def init_params(cfg: MinkUNetConfig, key) -> dict:
     keys = iter(jax.random.split(key, 128))
     p: dict = {}
-    w = cfg.ch
-    c0 = w(cfg.enc_channels[0])
-    p["stem1"] = init_conv(next(keys), ConvSpec(cfg.in_channels, c0, 3))
-    p["stem1_bn"] = _bn_relu_init(c0)
-    p["stem2"] = init_conv(next(keys), ConvSpec(c0, c0, 3))
-    p["stem2_bn"] = _bn_relu_init(c0)
-
-    cin = c0
-    for i, ce in enumerate(cfg.enc_channels):
-        ce = w(ce)
-        p[f"down{i}"] = init_conv(next(keys), ConvSpec(cin, ce, 2, stride=2))
-        p[f"down{i}_bn"] = _bn_relu_init(ce)
-        for b in range(cfg.blocks_per_stage):
-            p[f"enc{i}b{b}_1"] = init_conv(next(keys), ConvSpec(ce, ce, 3))
-            p[f"enc{i}b{b}_1_bn"] = _bn_relu_init(ce)
-            p[f"enc{i}b{b}_2"] = init_conv(next(keys), ConvSpec(ce, ce, 3))
-            p[f"enc{i}b{b}_2_bn"] = _bn_relu_init(ce)
-        cin = ce
-
-    skips = [c0] + [w(c) for c in cfg.enc_channels[:-1]]
-    for i, cd in enumerate(cfg.dec_channels):
-        cd = w(cd)
-        p[f"up{i}"] = init_conv(next(keys), ConvSpec(cin, cd, 2, stride=2, transposed=True))
-        p[f"up{i}_bn"] = _bn_relu_init(cd)
-        cskip = skips[-(i + 1)]
-        for b in range(cfg.blocks_per_stage):
-            cin_b = cd + cskip if b == 0 else cd
-            p[f"dec{i}b{b}_1"] = init_conv(next(keys), ConvSpec(cin_b, cd, 3))
-            p[f"dec{i}b{b}_1_bn"] = _bn_relu_init(cd)
-            p[f"dec{i}b{b}_2"] = init_conv(next(keys), ConvSpec(cd, cd, 3))
-            p[f"dec{i}b{b}_2_bn"] = _bn_relu_init(cd)
-        cin = cd
+    for lp in declare(cfg).layers:
+        p[lp.name] = init_conv(next(keys), lp.spec)
+        p[f"{lp.name}_bn"] = _bn_relu_init(lp.spec.out_channels)
+    cin = cfg.ch(cfg.dec_channels[-1])
     p["head"] = {"w": jax.random.normal(next(keys), (cin, cfg.num_classes)) * cin ** -0.5}
     return p
 
 
+def declare(cfg: MinkUNetConfig) -> ModelDecl:
+    """Declare the layer list, execution program and kernel-map program.
+
+    ``compile_plan(declare(cfg))`` is the compiled artifact every consumer
+    shares (models, tuner, serving engine, training loop)."""
+    w = cfg.ch
+    c0 = w(cfg.enc_channels[0])
+    layers = [
+        LayerPlan("stem1", ConvSpec(cfg.in_channels, c0, 3), ("sub", 1), (1, 3, "sub")),
+        LayerPlan("stem2", ConvSpec(c0, c0, 3), ("sub", 1), (1, 3, "sub")),
+    ]
+    ops = [("conv", "stem1"), ("conv", "stem2"), ("push",)]
+
+    def res_block(prefix: str, cin_b: int, c: int, sig, ref):
+        layers.append(LayerPlan(f"{prefix}_1", ConvSpec(cin_b, c, 3), ref, sig))
+        layers.append(LayerPlan(f"{prefix}_2", ConvSpec(c, c, 3), ref, sig,
+                                relu=False))
+        ops.extend([("res_begin",), ("conv", f"{prefix}_1"),
+                    ("conv", f"{prefix}_2"), ("res_end",)])
+
+    cin = c0
+    stride = 1
+    for i, ce in enumerate(cfg.enc_channels):
+        ce = w(ce)
+        layers.append(LayerPlan(f"down{i}", ConvSpec(cin, ce, 2, stride=2),
+                                ("down", stride), (stride, 2, "down")))
+        ops.append(("conv", f"down{i}"))
+        stride *= 2
+        for b in range(cfg.blocks_per_stage):
+            res_block(f"enc{i}b{b}", ce, ce, (stride, 3, "sub"), ("sub", stride))
+        if i < len(cfg.enc_channels) - 1:
+            ops.append(("push",))
+        cin = ce
+
+    skips = [c0] + [w(c) for c in cfg.enc_channels[:-1]]
+    n = len(cfg.dec_channels)
+    for i, cd in enumerate(cfg.dec_channels):
+        cd = w(cd)
+        lvl = n - i - 1            # decoder level i undoes down{lvl}
+        s = 2 ** lvl
+        layers.append(LayerPlan(f"up{i}", ConvSpec(cin, cd, 2, stride=2, transposed=True),
+                                ("up", s), (s, 2, "up")))
+        ops.extend([("conv", f"up{i}"), ("concat",)])
+        cskip = skips[-(i + 1)]
+        for b in range(cfg.blocks_per_stage):
+            cin_b = cd + cskip if b == 0 else cd
+            res_block(f"dec{i}b{b}", cin_b, cd, (s, 3, "sub"), ("sub", s))
+        cin = cd
+    ops.append(("head", "head"))
+
+    return ModelDecl(arch="minkunet", layers=tuple(layers), ops=tuple(ops),
+                     map_specs=pyramid_map_specs(len(cfg.enc_channels),
+                                                 with_up=True))
+
+
+def network_plan(cfg: MinkUNetConfig,
+                 assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None,
+                 precision=None) -> NetworkPlan:
+    """Compile the execution plan: declare → compile (→ tune → persist)."""
+    return compile_plan(declare(cfg), assignment=assignment, precision=precision)
+
+
 def layer_signatures(cfg: MinkUNetConfig) -> Dict[str, tuple]:
     """layer name → map-sharing signature (stride_in, K, kind) for grouping."""
-    sigs: Dict[str, tuple] = {"stem1": (1, 3, "sub"), "stem2": (1, 3, "sub")}
-    for i in range(len(cfg.enc_channels)):
-        sigs[f"down{i}"] = (2 ** i, 2, "down")
-        for b in range(cfg.blocks_per_stage):
-            sigs[f"enc{i}b{b}_1"] = (2 ** (i + 1), 3, "sub")
-            sigs[f"enc{i}b{b}_2"] = (2 ** (i + 1), 3, "sub")
-    n = len(cfg.dec_channels)
-    for i in range(n):
-        lvl = n - i - 1            # decoder level i undoes down{lvl}
-        sigs[f"up{i}"] = (2 ** lvl, 2, "up")
-        for b in range(cfg.blocks_per_stage):
-            sigs[f"dec{i}b{b}_1"] = (2 ** lvl, 3, "sub")
-            sigs[f"dec{i}b{b}_2"] = (2 ** lvl, 3, "sub")
-    return sigs
+    return {lp.name: lp.sig for lp in declare(cfg).layers}
 
 
 def build_maps(st: SparseTensor, cache: Optional[MapCache] = None) -> dict:
-    """Build every kernel map once (maps are shared within groups).
-
-    A single ``MapCache`` spans the whole pyramid: the submanifold and
-    strided convs at each level share one sorted coordinate table, and each
-    downsample's unique pass emits the next level's table for free.  Callers
-    that already hold a warm cache for these coordinates (the serving
-    engine) pass it in; by default a fresh one is created per call, which is
-    also the only safe choice under ``jit`` (a cache must not outlive its
-    trace)."""
-    if cache is None:   # NOT `or`: an empty caller cache is falsy but wanted
-        cache = MapCache.for_tensor(st)
-    maps = {}
-    cur = st
-    maps[("sub", 1)] = build_kmap(cur, 3, 1, cache=cache)
-    tensors = {1: cur}
-    stride = 1
-    for i in range(4):
-        kd = build_kmap(cur, 2, 2, cache=cache)
-        maps[("down", stride)] = kd
-        cur = SparseTensor(coords=kd.out_coords, feats=jnp.zeros(
-            (kd.capacity, 1), st.feats.dtype), num_valid=kd.n_out, stride=kd.out_stride,
-            batch_bound=st.batch_bound, spatial_bound=st.spatial_bound)
-        stride *= 2
-        tensors[stride] = cur
-        maps[("sub", stride)] = build_kmap(cur, 3, 1, cache=cache)
-    for lvl in range(3, -1, -1):
-        s = 2 ** lvl
-        maps[("up", s)] = transpose_kmap(maps[("down", s)], tensors[s])
-    return maps
-
-
-def _conv_bn(p, name, st, kmap, cfgs, relu=True, bn_mode="batch"):
-    st = apply_conv(p[name], st, kmap, cfgs)
-    return _bn_relu(p[f"{name}_bn"], st, relu, mode=bn_mode)
+    """Build every kernel map once (maps are shared within groups) — the
+    standard 4-level U-Net map program (``plan.pyramid_map_specs``), with
+    the table-adoption edges declared explicitly per ``KmapSpec``."""
+    return planlib.build_maps_from_specs(pyramid_map_specs(4, with_up=True),
+                                         st, cache)
 
 
 def apply(params, st: SparseTensor, cfg: MinkUNetConfig,
           maps: Optional[dict] = None,
           assignment: Optional[Dict[tuple, TrainDataflowConfig]] = None,
-          bn_mode: str = "batch") -> jax.Array:
+          bn_mode: str = "batch",
+          nplan: Optional[NetworkPlan] = None,
+          precision=None) -> jax.Array:
     """Returns per-point class logits (capacity, num_classes).
 
-    ``bn_mode="affine"`` runs inference-mode normalization (see ``_bn_relu``)
-    — required by the serving engine so batched and per-scene forwards agree
-    bit-for-bit."""
-    maps = maps or build_maps(st)
-    assignment = assignment or {}
-
-    def cfg_for(sig) -> TrainDataflowConfig:
-        return assignment.get(sig, TrainDataflowConfig())
-
-    def res_block(st, prefix, sig, kmap):
-        idn = st.feats
-        st = _conv_bn(params, f"{prefix}_1", st, kmap, cfg_for(sig), bn_mode=bn_mode)
-        st = apply_conv(params[f"{prefix}_2"], st, kmap, cfg_for(sig))
-        st = _bn_relu(params[f"{prefix}_2_bn"], st, relu=False, mode=bn_mode)
-        y = jax.nn.relu(st.feats + (idn if idn.shape == st.feats.shape else 0))
-        return st.replace_feats(jnp.where(st.valid_mask[:, None], y, 0))
-
-    x = _conv_bn(params, "stem1", st, maps[("sub", 1)], cfg_for((1, 3, "sub")), bn_mode=bn_mode)
-    x = _conv_bn(params, "stem2", x, maps[("sub", 1)], cfg_for((1, 3, "sub")), bn_mode=bn_mode)
-    skips = [x]
-    stride = 1
-    for i in range(len(cfg.enc_channels)):
-        x = _conv_bn(params, f"down{i}", x, maps[("down", stride)],
-                     cfg_for((stride, 2, "down")), bn_mode=bn_mode)
-        stride *= 2
-        for b in range(cfg.blocks_per_stage):
-            x = res_block(x, f"enc{i}b{b}", (stride, 3, "sub"), maps[("sub", stride)])
-        if i < len(cfg.enc_channels) - 1:
-            skips.append(x)
-
-    n = len(cfg.dec_channels)
-    for i in range(n):
-        stride //= 2
-        x = _conv_bn(params, f"up{i}", x, maps[("up", stride)],
-                     cfg_for((stride, 2, "up")), bn_mode=bn_mode)
-        skip = skips[-(i + 1)]
-        x = x.replace_feats(jnp.concatenate([x.feats, skip.feats], axis=1))
-        for b in range(cfg.blocks_per_stage):
-            x = res_block(x, f"dec{i}b{b}", (stride, 3, "sub"), maps[("sub", stride)])
-
-    return x.feats @ params["head"]["w"]
+    Compiles a ``NetworkPlan`` from the declaration (or executes a caller's
+    pre-compiled ``nplan``, in which case ``assignment``/``precision`` are
+    already baked in) — bit-identical to the historical hand-written
+    forward.  ``bn_mode="affine"`` runs inference-mode normalization (see
+    ``core.plan.bn_relu``) — required by the serving engine so batched and
+    per-scene forwards agree bit-for-bit."""
+    if nplan is None:
+        nplan = network_plan(cfg, assignment=assignment, precision=precision)
+    return nplan.apply(params, st, maps, bn_mode=bn_mode)

@@ -14,8 +14,11 @@ Ties the subsystem together (DESIGN: ISSUE 2 tentpole):
   content digest of their packed coordinates, and a small LRU maps digest →
   device-resident map stack (Minuet's observation, lifted from layers to
   requests — repeated frames/scenes skip mapping entirely);
-* tuned dataflow assignments load from a ``PlanRegistry`` at startup (tune
-  once, serve forever) and apply per layer group;
+* the engine executes a compiled ``core.plan.NetworkPlan`` — the same
+  artifact the models and the training stack run — loaded from a
+  ``PlanRegistry`` at startup when one was persisted (tune once, serve
+  forever; v1 assignment-only files recompile the plan from the model
+  declaration) and re-tuned in place by ``tune()``;
 * latency/throughput stats: per-scene p50/p95, scenes/s, recompile and
   map-cache counters.
 
@@ -37,7 +40,8 @@ import jax
 import numpy as np
 
 from repro.core import dataflows as df
-from repro.core.autotuner import Autotuner, partition_groups, timeit_fn
+from repro.core.autotuner import timeit_fn
+from repro.core.plan import NetworkPlan, PlanTuner
 from repro.core.sparse_conv import TrainDataflowConfig
 from repro.core.sparse_tensor import SparseTensor
 from repro.models import centerpoint, minkunet
@@ -139,7 +143,8 @@ class Engine:
                  spatial_bound: int = DEFAULT_SPATIAL_BOUND,
                  model_config=None, params=None,
                  plans: Optional[PlanRegistry] = None,
-                 maps_cache_size: int = 32, seed: int = 0):
+                 maps_cache_size: int = 32, seed: int = 0,
+                 precision=None):
         if arch not in ARCHS:
             raise ValueError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
         self.binding = ARCHS[arch]
@@ -153,6 +158,20 @@ class Engine:
             plans = PlanRegistry.load(plans)
         self.plans = plans or PlanRegistry()
         self.assignment = self.plans.get(arch)
+        # The compiled artifact every stage shares: a persisted NetworkPlan
+        # is used as-is when it still matches this engine's model config
+        # (same layer names + ConvSpecs); otherwise — v1 files, or a plan
+        # tuned under a different width/depth — one is recompiled from the
+        # model declaration with the registry's assignment.
+        nplan = self.plans.network(arch)
+        compiled = self.binding.model.network_plan(self.cfg,
+                                                   assignment=self.assignment)
+        if nplan is None or [(lp.name, lp.spec) for lp in nplan.layers] != \
+                [(lp.name, lp.spec) for lp in compiled.layers]:
+            nplan = compiled
+        if precision is not None:
+            nplan = nplan.with_precision(precision)
+        self.nplan: NetworkPlan = nplan
         self.out_stride = self.binding.out_stride_of(self.cfg)
         self.stats = EngineStats()
         self.maps_cache_size = maps_cache_size
@@ -166,10 +185,12 @@ class Engine:
     def _builder_for(self, cap: int) -> Callable:
         fn = self._builders.get(cap)
         if fn is None:
+            nplan = self.nplan
+
             def build(st):
                 # trace-time side effect: counts actual recompiles, not calls
                 self.stats.map_compiles[cap] = self.stats.map_compiles.get(cap, 0) + 1
-                return self.binding.model.build_maps(st)
+                return nplan.build_maps(st)
 
             fn = jax.jit(build)
             self._builders[cap] = fn
@@ -178,12 +199,11 @@ class Engine:
     def _executor_for(self, cap: int) -> Callable:
         fn = self._executors.get(cap)
         if fn is None:
-            binding, cfg, assignment = self.binding, self.cfg, dict(self.assignment)
+            binding, cfg, nplan = self.binding, self.cfg, self.nplan
 
             def run(params, st, maps):
                 self.stats.recompiles[cap] = self.stats.recompiles.get(cap, 0) + 1
-                feats = binding.model.apply(params, st, cfg, maps,
-                                            assignment=assignment, bn_mode="affine")
+                feats = nplan.apply(params, st, maps, bn_mode="affine")
                 return binding.outputs_of(cfg, st, maps, feats)
 
             fn = jax.jit(run)
@@ -275,11 +295,13 @@ class Engine:
              space: Optional[Sequence[df.DataflowConfig]] = None,
              iters: int = 2, save: bool = True) -> Dict[tuple, TrainDataflowConfig]:
         """Run the group-based Sparse Autotuner on a representative packed
-        batch and persist the winning assignment to the PlanRegistry.
+        batch and persist the winning *NetworkPlan* to the PlanRegistry.
 
-        Measurement is end-to-end engine-forward latency (paper §4: never
-        per-kernel time).  Existing executors are dropped so the new
-        assignment takes effect on the next flush.
+        Measurement is end-to-end engine-forward latency of each candidate
+        plan (paper §4: never per-kernel time).  Existing executors are
+        dropped so the tuned plan takes effect on the next flush.  Returns
+        the per-group assignment for inspection; the serialized plan (and
+        its v1-compatible assignment block) lands in the registry.
         """
         space = list(space or [df.DataflowConfig("gather_scatter"),
                                df.DataflowConfig("implicit_gemm", n_splits=1)])
@@ -288,26 +310,18 @@ class Engine:
         group = self.batcher.plan([s.num_points for s in sample_scenes])[0]
         batch = self.batcher.pack([sample_scenes[i] for i in group])
         maps = self._maps_for(batch)
-        sigs = self.binding.model.layer_signatures(self.cfg)
-        groups = partition_groups(sigs)
-        sig_of = {g.name: sigs[g.layer_names[0]] for g in groups}
-        binding, cfg = self.binding, self.cfg
 
-        def measure(assign):
-            amap = {sig_of[k]: TrainDataflowConfig.bind_all(v)
-                    for k, v in assign.items()}
-            fn = jax.jit(lambda p, st, m: binding.model.apply(
-                p, st, cfg, m, assignment=amap, bn_mode="affine"))
+        def measure(candidate: NetworkPlan) -> float:
+            fn = jax.jit(lambda p, st, m: candidate.apply(p, st, m,
+                                                          bn_mode="affine"))
             return timeit_fn(lambda: jax.block_until_ready(
                 fn(self.params, batch.st, maps)), warmup=1, iters=iters)
 
-        tuner = Autotuner(groups, space, measure)
-        best = tuner.tune()
-        assignment = {sig_of[k]: TrainDataflowConfig.bind_all(v)
-                      for k, v in best.items()}
-        self.plans.set(self.arch, assignment)
+        tuned = PlanTuner(self.nplan, space, measure).tune()
+        self.nplan = tuned
+        self.assignment = tuned.assignment()
+        self.plans.set(self.arch, self.assignment, network=tuned)
         if save and self.plans.path:
             self.plans.save()
-        self.assignment = assignment
-        self._executors.clear()   # recompile with the tuned assignment
-        return assignment
+        self._executors.clear()   # recompile with the tuned plan
+        return dict(self.assignment)

@@ -1,18 +1,27 @@
-"""Persisted autotuner plans: tune once, serve forever.
+"""Persisted execution plans: tune once, serve forever.
 
-The Sparse Autotuner's output is a per-group ``TrainDataflowConfig``
-assignment keyed by map-sharing signature ``(stride, kernel_size, kind)``.
+The Sparse Autotuner's output is a tuned ``core.plan.NetworkPlan`` — per
+layer group, a ``TrainDataflowConfig`` bound into the plan's ``LayerPlan``s.
 Tuning measures end-to-end latency (minutes of wall clock); a serving
-process must not pay that on every start.  ``PlanRegistry`` persists
-assignments to a small JSON file and loads them at engine startup — the
-serving analogue of the paper's offline tuning step.
+process must not pay that on every start.  ``PlanRegistry`` persists plans
+to a small JSON file and loads them at engine startup — the serving
+analogue of the paper's offline tuning step.
 
-Schema (version 1)::
+Schema (version 2)::
 
-    {"version": 1,
+    {"version": 2,
      "plans": {"minkunet_kitti": {
-         "1:3:sub": {"fwd": {...DataflowConfig...}, "dgrad": …, "wgrad": …},
-         …}}}
+         "assignment": {"1:3:sub": {"fwd": {...DataflowConfig...},
+                                    "dgrad": ..., "wgrad": ...}, ...},
+         "network": {...serialized core.plan.NetworkPlan...} | null}}}
+
+The per-signature ``assignment`` block is the schema-v1 payload (kept both
+for humans diffing plan files and so a v2 file degrades gracefully);
+``network`` is the full serialized ``NetworkPlan`` (layers + execution ops
++ kernel-map program + precision policies).  Version-1 files from PR 2
+(``{"version": 1, "plans": {arch: {sig: cfg3}}}``) still load through the
+shim: their assignments are read and the network plan is recompiled from
+the model declaration at engine startup.
 """
 from __future__ import annotations
 
@@ -20,9 +29,10 @@ import json
 import os
 from typing import Dict, Optional
 
+from repro.core.plan import NetworkPlan
 from repro.core.sparse_conv import TrainDataflowConfig
 
-_VERSION = 1
+_VERSION = 2
 
 Assignment = Dict[tuple, TrainDataflowConfig]
 
@@ -37,28 +47,51 @@ def _sig_from_str(s: str) -> tuple:
     return (int(stride), int(k), kind)
 
 
+def _assignment_to_json(assignment: Assignment) -> dict:
+    return {_sig_to_str(sig): cfg.to_dict() for sig, cfg in assignment.items()}
+
+
+def _assignment_from_json(d: dict) -> Assignment:
+    return {_sig_from_str(s): TrainDataflowConfig.from_dict(c)
+            for s, c in d.items()}
+
+
 class PlanRegistry:
-    """arch name → {group signature → TrainDataflowConfig}, JSON-persisted."""
+    """arch name → tuned plan (assignment + optional NetworkPlan), JSON-persisted."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self._plans: Dict[str, Assignment] = {}
+        self._networks: Dict[str, NetworkPlan] = {}
 
-    def set(self, arch: str, assignment: Assignment) -> None:
+    def set(self, arch: str, assignment: Assignment,
+            network: Optional[NetworkPlan] = None) -> None:
         self._plans[arch] = dict(assignment)
+        if network is not None:
+            self._networks[arch] = network
+        else:
+            self._networks.pop(arch, None)
 
     def get(self, arch: str) -> Assignment:
         """The stored assignment for ``arch`` ({} when never tuned)."""
         return dict(self._plans.get(arch, {}))
+
+    def network(self, arch: str) -> Optional[NetworkPlan]:
+        """The stored NetworkPlan for ``arch`` (None when never stored —
+        v1 files and assignment-only writes; callers recompile from the
+        model declaration)."""
+        return self._networks.get(arch)
 
     def archs(self):
         return sorted(self._plans)
 
     def to_dict(self) -> dict:
         return {"version": _VERSION,
-                "plans": {arch: {_sig_to_str(sig): cfg.to_dict()
-                                 for sig, cfg in assignment.items()}
-                          for arch, assignment in sorted(self._plans.items())}}
+                "plans": {arch: {
+                    "assignment": _assignment_to_json(assignment),
+                    "network": (self._networks[arch].to_dict()
+                                if arch in self._networks else None)}
+                    for arch, assignment in sorted(self._plans.items())}}
 
     def save(self, path: Optional[str] = None) -> str:
         path = path or self.path
@@ -80,11 +113,18 @@ class PlanRegistry:
             raise FileNotFoundError(path)
         with open(path) as f:
             doc = json.load(f)
-        if doc.get("version") != _VERSION:
-            raise ValueError(f"unsupported plan version {doc.get('version')!r} "
-                             f"in {path} (expected {_VERSION})")
-        for arch, groups in doc.get("plans", {}).items():
-            reg._plans[arch] = {
-                _sig_from_str(s): TrainDataflowConfig.from_dict(d)
-                for s, d in groups.items()}
+        version = doc.get("version")
+        if version == 1:
+            # v1 shim (PR 2 files): {arch: {sig: cfg3}} — assignment only.
+            for arch, groups in doc.get("plans", {}).items():
+                reg._plans[arch] = _assignment_from_json(groups)
+            return reg
+        if version != _VERSION:
+            raise ValueError(f"unsupported plan version {version!r} "
+                             f"in {path} (expected {_VERSION} or 1)")
+        for arch, entry in doc.get("plans", {}).items():
+            reg._plans[arch] = _assignment_from_json(entry.get("assignment", {}))
+            net = entry.get("network")
+            if net is not None:
+                reg._networks[arch] = NetworkPlan.from_dict(net)
         return reg

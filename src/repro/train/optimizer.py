@@ -1,10 +1,15 @@
 """Pure-JAX optimizers (no optax in this environment).
 
 AdamW with decoupled weight decay and global-norm clipping; mixed-precision
-posture: params may be bf16 while the first/second moments and the master
-copy are fp32 (``MixedPrecisionPolicy``).  A factored second-moment option
-(Adafactor-style) exists for the 1T-param cells where full Adam state cannot
-fit the mesh.
+posture: params may be bf16 while the first/second moments — and, with
+``master_weights=True``, an fp32 **master copy** of the parameters — stay
+fp32.  The master copy is what makes the ``core.precision.BF16`` policy a
+real training recipe rather than a forward-only cast: per-step updates are
+routinely smaller than one bf16 ulp of the weight, so updating bf16 weights
+in place silently drops them; instead the fp32 master accumulates the
+update and the bf16 working copy is re-derived from it each step.  A
+factored second-moment option (Adafactor-style) exists for the 1T-param
+cells where full Adam state cannot fit the mesh.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ class AdamWConfig:
     clip_norm: float = 1.0
     factored: bool = False       # factored 2nd moment for giant models
     state_dtype: Any = jnp.float32
+    master_weights: bool = False  # keep an fp32 master copy of (bf16) params
 
 
 def global_norm(tree) -> jax.Array:
@@ -55,17 +61,24 @@ def init_opt_state(params, cfg: AdamWConfig):
         return {"m": jnp.zeros_like(p, cfg.state_dtype),
                 "v": jnp.zeros_like(p, cfg.state_dtype)}
 
-    return {"mu": jax.tree.map(per_leaf, params),
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"mu": jax.tree.map(per_leaf, params),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
 
 
 def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step.  With ``cfg.master_weights`` the update applies to
+    the fp32 master copy in ``state["master"]`` and the returned params are
+    the master re-cast to the working dtype (bf16 under the mixed policy) —
+    updates smaller than a bf16 ulp accumulate instead of vanishing."""
     step = state["step"] + 1
     grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
     b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
     b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
 
-    def per_leaf(p, g, s):
+    def per_leaf(p, g, s, master=None):
         g32 = g.astype(jnp.float32)
         m = cfg.b1 * s["m"].astype(jnp.float32) + (1 - cfg.b1) * g32
         if "v" in s:
@@ -82,17 +95,23 @@ def adamw_update(params, grads, state, cfg: AdamWConfig):
                     / jnp.expand_dims(denom, r)) / b2c
             new_s = {"m": m.astype(cfg.state_dtype), "vr": vr.astype(cfg.state_dtype),
                      "vc": vc.astype(cfg.state_dtype)}
-        upd = (m / b1c) / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
-        new_p = (p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype)
-        return new_p, new_s
+        ref = p.astype(jnp.float32) if master is None else master
+        upd = (m / b1c) / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * ref
+        new_master = ref - cfg.lr * upd
+        return new_master.astype(p.dtype), new_s, new_master
 
     flat_p, tdef = jax.tree.flatten(params)
     flat_g = tdef.flatten_up_to(grads)
     flat_s = tdef.flatten_up_to(state["mu"])
-    out = [per_leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    flat_m = (tdef.flatten_up_to(state["master"]) if "master" in state
+              else [None] * len(flat_p))
+    out = [per_leaf(p, g, s, m) for p, g, s, m in zip(flat_p, flat_g, flat_s, flat_m)]
     new_params = tdef.unflatten([o[0] for o in out])
     new_mu = tdef.unflatten([o[1] for o in out])
-    return new_params, {"mu": new_mu, "step": step}, gnorm
+    new_state = {"mu": new_mu, "step": step}
+    if "master" in state:
+        new_state["master"] = tdef.unflatten([o[2] for o in out])
+    return new_params, new_state, gnorm
 
 
 def opt_state_pspecs(param_pspecs, cfg: AdamWConfig):
@@ -105,6 +124,9 @@ def opt_state_pspecs(param_pspecs, cfg: AdamWConfig):
             return {"m": spec, "vr": P(), "vc": P()}
         return {"m": spec, "v": spec}
 
-    return {"mu": jax.tree.map(per_leaf, param_pspecs,
-                               is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
-            "step": jax.sharding.PartitionSpec()}
+    specs = {"mu": jax.tree.map(per_leaf, param_pspecs,
+                                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
+             "step": jax.sharding.PartitionSpec()}
+    if cfg.master_weights:
+        specs["master"] = param_pspecs  # master copy shards like the params
+    return specs

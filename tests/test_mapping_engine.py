@@ -1,5 +1,7 @@
-"""Packed-key mapping engine: equivalence with the legacy multi-word path,
-cross-layer table caching, dgrad capacity, and bitmask dtype invariants.
+"""Packed-key mapping engine: equivalence with brute-force numpy references
+(the ``engine="legacy"`` multi-word oracle was deleted after its A/B window
+closed — see ROADMAP), cross-layer table caching, dgrad capacity, and
+bitmask dtype invariants.
 
 Property tests use ``hypothesis`` when installed (requirements-dev.txt) and
 fall back to a deterministic sample otherwise (``conftest.property_test``).
@@ -15,7 +17,7 @@ from repro.core import dataflows as df
 from repro.core import hashing
 from repro.core import kmap as km
 from repro.core.sparse_conv import sparse_conv_apply
-from repro.core.sparse_tensor import SparseTensor, make_sparse_tensor
+from repro.core.sparse_tensor import INVALID_COORD, SparseTensor, make_sparse_tensor
 
 KMAP_FIELDS = ("m_out", "out_coords", "n_out", "ws_in", "ws_out", "ws_count",
                "bitmask")
@@ -44,11 +46,84 @@ def assert_kmaps_equal(a: km.KernelMap, b: km.KernelMap):
 
 
 # ---------------------------------------------------------------------------
-# Packed lookup ≡ multi-word lookup
+# Brute-force numpy references (the oracles the engine is tested against)
+# ---------------------------------------------------------------------------
+
+def np_bitmask(hits: np.ndarray) -> np.ndarray:
+    """Reference for km._bitmask: exact for KD ≤ 31, composite above."""
+    kd = hits.shape[-1]
+    if kd <= 31:
+        return (hits * (1 << np.arange(kd))).sum(axis=-1).astype(np.int32)
+    pop = hits.sum(axis=-1).astype(np.int64)
+    low = (hits[..., :24] * (1 << np.arange(24))).sum(axis=-1).astype(np.int64)
+    return ((pop << 24) | low).astype(np.int32)
+
+
+def np_build_kmap(stx, kernel: int, stride: int = 1, out_capacity=None) -> dict:
+    """O(N·K^D) dict-based reference for build_kmap's full contract:
+    output-stationary map, lex-sorted strided unique coords, hits-first
+    pair lists, bitmasks, and all the padding conventions."""
+    coords = np.asarray(stx.coords)
+    n_valid = int(stx.num_valid)
+    t = stx.stride
+    cap_in = coords.shape[0]
+    offs = np.asarray(km.kernel_offsets(kernel, stx.ndim_space))
+    kd = offs.shape[0]
+    lut = {tuple(c): i for i, c in enumerate(coords[:n_valid])}
+
+    if stride == 1:
+        out_coords = coords.copy()
+        n_out = n_valid
+        cap_out = out_capacity or cap_in
+        out_coords = out_coords[:cap_out]
+        out_stride = t
+    else:
+        out_stride = t * stride
+        grid = coords[:n_valid].copy()
+        grid[:, 1:] = (grid[:, 1:] // out_stride) * out_stride
+        uniq = np.unique(grid, axis=0)        # lexicographic ascending
+        n_out = uniq.shape[0]
+        cap_out = out_capacity or cap_in
+        out_coords = np.full((cap_out, coords.shape[1]), int(INVALID_COORD),
+                             np.int32)
+        out_coords[:min(n_out, cap_out)] = uniq[:cap_out]
+        n_out = min(n_out, cap_out)
+
+    m_out = -np.ones((cap_out, kd), np.int32)
+    for i in range(n_out):
+        c = out_coords[i]
+        for k, off in enumerate(offs):
+            q = (c[0],) + tuple(c[1:] + off * t)
+            m_out[i, k] = lut.get(q, -1)
+
+    ws_in = -np.ones((kd, cap_out), np.int32)
+    ws_out = -np.ones((kd, cap_out), np.int32)
+    ws_count = np.zeros((kd,), np.int32)
+    for k in range(kd):
+        rows = np.nonzero(m_out[:, k] >= 0)[0]
+        ws_count[k] = len(rows)
+        ws_in[k, :len(rows)] = m_out[rows, k]
+        ws_out[k, :len(rows)] = rows
+
+    bm = np.zeros((cap_out,), np.int32)
+    bm[:n_out] = np_bitmask(m_out[:n_out] >= 0)
+    return dict(m_out=m_out, out_coords=out_coords.astype(np.int32),
+                n_out=np.int32(n_out), ws_in=ws_in, ws_out=ws_out,
+                ws_count=ws_count, bitmask=bm)
+
+
+def assert_kmap_matches_ref(kmap: km.KernelMap, ref: dict):
+    for f in KMAP_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(kmap, f)), ref[f],
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Packed lookup ≡ brute-force dict lookup (all three key-spec modes)
 # ---------------------------------------------------------------------------
 
 def _spec_of_kind(kind, batch, lo, extent):
-    """One spec per engine mode: single int32 word, packed [hi, lo] pair,
+    """One spec per packing mode: single int32 word, packed [hi, lo] pair,
     and the raw no-range-limit fallback (default when bounds are unknown)."""
     if kind == "one":
         spec = hashing.key_spec_for(3, batch_bound=batch,
@@ -74,11 +149,10 @@ def _spec_of_kind(kind, batch, lo, extent):
                                batch=st.integers(1, 4),
                                spec_kind=st.sampled_from(["one", "two", "raw"])),
     max_examples=24)
-def test_property_packed_lookup_matches_multiword(seed, extent, lo, batch,
-                                                  spec_kind):
+def test_property_packed_lookup_matches_bruteforce(seed, extent, lo, batch,
+                                                   spec_kind):
     stx = random_tensor(seed, n=80, cap=96, extent=extent, lo=lo, batch=batch)
     spec = _spec_of_kind(spec_kind, batch, lo, extent)
-    legacy = hashing.SortedCoords(stx.coords, stx.valid_mask)
     packed = hashing.CoordTable.build(stx.coords, stx.valid_mask, spec)
     rng = np.random.default_rng(seed + 1)
     # half perturbed copies of table rows (some present), half random
@@ -86,9 +160,11 @@ def test_property_packed_lookup_matches_multiword(seed, extent, lo, batch,
     q1 = q1 + rng.integers(-1, 2, size=q1.shape)
     q2 = np.concatenate([rng.integers(0, batch, (64, 1)),
                          rng.integers(lo - 2, extent + 2, (64, 3))], axis=1)
-    q = jnp.asarray(np.concatenate([q1, q2]).astype(np.int32))
-    np.testing.assert_array_equal(np.asarray(legacy.lookup(q)),
-                                  np.asarray(packed.lookup(q)))
+    q = np.concatenate([q1, q2]).astype(np.int32)
+    lut = {tuple(c): i for i, c in
+           enumerate(np.asarray(stx.coords)[: int(stx.num_valid)])}
+    ref = np.asarray([lut.get(tuple(row), -1) for row in q], np.int32)
+    np.testing.assert_array_equal(np.asarray(packed.lookup(jnp.asarray(q))), ref)
 
 
 def test_pack_unpack_roundtrip_with_negatives():
@@ -116,8 +192,8 @@ def test_undeclared_bounds_have_no_range_limit():
     stx = make_sparse_tensor(jnp.asarray(coords), jnp.ones((8, 4)), 8)
     assert stx.spatial_bound == 0  # nothing declared
     for kernel, stride in [(3, 1), (2, 2)]:
-        assert_kmaps_equal(km.build_kmap(stx, kernel, stride),
-                           km.build_kmap(stx, kernel, stride, engine="legacy"))
+        assert_kmap_matches_ref(km.build_kmap(stx, kernel, stride),
+                                np_build_kmap(stx, kernel, stride))
     # self-hit at the center offset for every valid row
     m = np.asarray(km.build_kmap(stx, 3, 1).m_out)
     np.testing.assert_array_equal(m[:8, 0], np.arange(8))
@@ -129,8 +205,7 @@ def test_huge_declared_bounds_fall_back_instead_of_crashing():
     stx = make_sparse_tensor(
         jnp.asarray([[0, 20000, -20000, 3], [1, 5, 5, 5]], jnp.int32),
         jnp.ones((2, 4)), 2, batch_bound=2, spatial_bound=20000)
-    assert_kmaps_equal(km.build_kmap(stx, 2, 2),
-                       km.build_kmap(stx, 2, 2, engine="legacy"))
+    assert_kmap_matches_ref(km.build_kmap(stx, 2, 2), np_build_kmap(stx, 2, 2))
 
 
 def test_no_valid_key_aliases_pad_sentinel():
@@ -159,17 +234,16 @@ def test_out_of_range_queries_miss():
 
 
 # ---------------------------------------------------------------------------
-# build_kmap: packed ≡ legacy, with and without the MapCache
+# build_kmap ≡ numpy reference, with and without the MapCache
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
 @pytest.mark.parametrize("kernel,stride", [(3, 1), (2, 2), (3, 2)])
 @pytest.mark.parametrize("bounds", [False, True])
-def test_build_kmap_matches_legacy(seed, kernel, stride, bounds):
+def test_build_kmap_matches_bruteforce(seed, kernel, stride, bounds):
     stx = random_tensor(seed, extent=16, lo=-4, batch=2, bounds=bounds)
-    a = km.build_kmap(stx, kernel, stride, engine="legacy")
-    b = km.build_kmap(stx, kernel, stride, engine="packed")
-    assert_kmaps_equal(a, b)
+    assert_kmap_matches_ref(km.build_kmap(stx, kernel, stride),
+                            np_build_kmap(stx, kernel, stride))
 
 
 def test_cached_table_reuse_and_adoption():
@@ -177,26 +251,27 @@ def test_cached_table_reuse_and_adoption():
     cache = km.MapCache.for_tensor(stx)
     sub = km.build_kmap(stx, 3, 1, cache=cache)
     down = km.build_kmap(stx, 2, 2, cache=cache)
-    assert_kmaps_equal(sub, km.build_kmap(stx, 3, 1, engine="legacy"))
-    assert_kmaps_equal(down, km.build_kmap(stx, 2, 2, engine="legacy"))
+    assert_kmap_matches_ref(sub, np_build_kmap(stx, 3, 1))
+    assert_kmap_matches_ref(down, np_build_kmap(stx, 2, 2))
     # the downsample adopted its output table: the child submanifold map
     # must come out identical to a from-scratch build
     cur = SparseTensor(coords=down.out_coords,
                        feats=jnp.zeros((down.capacity, 1)),
                        num_valid=down.n_out, stride=down.out_stride)
     child = km.build_kmap(cur, 3, 1, cache=cache)
-    assert_kmaps_equal(child, km.build_kmap(cur, 3, 1, engine="legacy"))
+    assert_kmap_matches_ref(child, np_build_kmap(cur, 3, 1))
     # exactly two tables live in the cache: stx's and the adopted child's
     assert len(cache._tables) == 2
+    assert cache.hits >= 2   # the down reused stx's table; the child hit too
 
 
 def test_transpose_kmap_equivalent_under_cached_table():
     stx = random_tensor(4, extent=16, bounds=True)
     cache = km.MapCache.for_tensor(stx)
     fwd_cached = km.build_kmap(stx, 2, 2, cache=cache)
-    fwd_legacy = km.build_kmap(stx, 2, 2, engine="legacy")
+    fwd_fresh = km.build_kmap(stx, 2, 2)
     assert_kmaps_equal(km.transpose_kmap(fwd_cached, stx),
-                       km.transpose_kmap(fwd_legacy, stx))
+                       km.transpose_kmap(fwd_fresh, stx))
 
 
 def test_build_kmap_inside_jit_with_cache():
@@ -210,33 +285,35 @@ def test_build_kmap_inside_jit_with_cache():
         return a, b
 
     a, b = build()
-    assert_kmaps_equal(a, km.build_kmap(stx, 3, 1, engine="legacy"))
-    assert_kmaps_equal(b, km.build_kmap(stx, 2, 2, engine="legacy"))
+    assert_kmap_matches_ref(a, np_build_kmap(stx, 3, 1))
+    assert_kmap_matches_ref(b, np_build_kmap(stx, 2, 2))
 
 
 # ---------------------------------------------------------------------------
-# All dataflows bit-identical on packed-engine maps vs seed maps
+# All dataflows bit-identical on cached-table maps vs fresh maps
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("kernel,stride", [(3, 1), (2, 2)])
-def test_dataflows_bit_identical_on_new_maps(kernel, stride):
-    stx = random_tensor(6, n=60, cap=64, channels=4, extent=10)
-    new = km.build_kmap(stx, kernel, stride, engine="packed")
-    old = km.build_kmap(stx, kernel, stride, engine="legacy")
+def test_dataflows_bit_identical_on_cached_maps(kernel, stride):
+    stx = random_tensor(6, n=60, cap=64, channels=4, extent=10, bounds=True)
+    cache = km.MapCache.for_tensor(stx)
+    cached = km.build_kmap(stx, kernel, stride, cache=cache)
+    fresh = km.build_kmap(stx, kernel, stride)
+    assert_kmaps_equal(cached, fresh)
     kd = kernel ** 3
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (kd, 4, 8)) * 0.3
-    dy = jax.random.normal(key, (new.capacity, 8))
+    dy = jax.random.normal(key, (fresh.capacity, 8))
     for flow in df.DATAFLOWS:
         cfg = df.DataflowConfig(flow)
-        y_new = df.sparse_conv_forward(stx.feats, w, new, cfg)
-        y_old = df.sparse_conv_forward(stx.feats, w, old, cfg)
+        y_new = df.sparse_conv_forward(stx.feats, w, cached, cfg)
+        y_old = df.sparse_conv_forward(stx.feats, w, fresh, cfg)
         np.testing.assert_array_equal(np.asarray(y_new), np.asarray(y_old))
-        dx_new = df.sparse_conv_dgrad(dy, w, new, cfg, in_capacity=stx.capacity)
-        dx_old = df.sparse_conv_dgrad(dy, w, old, cfg, in_capacity=stx.capacity)
+        dx_new = df.sparse_conv_dgrad(dy, w, cached, cfg, in_capacity=stx.capacity)
+        dx_old = df.sparse_conv_dgrad(dy, w, fresh, cfg, in_capacity=stx.capacity)
         np.testing.assert_array_equal(np.asarray(dx_new), np.asarray(dx_old))
-        dw_new = df.sparse_conv_wgrad(stx.feats, dy, new, cfg)
-        dw_old = df.sparse_conv_wgrad(stx.feats, dy, old, cfg)
+        dw_new = df.sparse_conv_wgrad(stx.feats, dy, cached, cfg)
+        dw_old = df.sparse_conv_wgrad(stx.feats, dy, fresh, cfg)
         np.testing.assert_array_equal(np.asarray(dw_new), np.asarray(dw_old))
 
 
@@ -299,13 +376,10 @@ def test_bitmask_composite_path_above_31():
     hit = jnp.asarray(rng.integers(0, 2, size=(50, 64)).astype(bool))
     bm = km._bitmask(hit)
     assert bm.dtype == jnp.int32
-    h = np.asarray(hit)
-    pop = h.sum(axis=1).astype(np.int64)
-    low = (h[:, :24] * (1 << np.arange(24))).sum(axis=1).astype(np.int64)
-    np.testing.assert_array_equal(np.asarray(bm), (pop << 24) | low)
+    np.testing.assert_array_equal(np.asarray(bm), np_bitmask(np.asarray(hit)))
     # K=4 (even) in 3D has volume 64 → exercises the composite path end-to-end
     stx = random_tensor(10, extent=16)
     kmap = km.build_kmap(stx, 4, 2)
     assert kmap.volume == 64
     assert kmap.bitmask.dtype == jnp.int32
-    assert_kmaps_equal(kmap, km.build_kmap(stx, 4, 2, engine="legacy"))
+    assert_kmap_matches_ref(kmap, np_build_kmap(stx, 4, 2))

@@ -1,0 +1,152 @@
+"""Churned-stream serving: scene-granular and incremental map reuse.
+
+The traffic PR-2's whole-batch digest cannot help with: a pool of concurrent
+scene streams where every frame re-submits all streams but only a fraction
+churn (point-level deltas), so no packed batch ever repeats exactly.  Four
+engine configurations replay the same deterministic stream
+(``workload.churned_stream``):
+
+* ``cold``     — "sort" strategy with the batch-map LRU disabled: every
+  flush pays a full jitted batch map build (the mapping-cost floor);
+* ``digest``   — "sort" strategy, PR-2 behavior: the whole-batch digest LRU
+  is live but scores only misses on a churned stream;
+* ``composed`` — "composed" strategy: per-scene kernel-map stacks cached by
+  scene digest and merge-composed into batch maps, so only churned scenes
+  ever build maps (at their own size);
+* ``delta``    — "incremental" strategy driven through ``submit_delta``:
+  churned frames additionally delta-merge their scene's sorted table
+  instead of re-sorting the cloud.
+
+Emits wall-clock scenes/s and p50/p95 per-scene latency per variant, the
+scene-store hit rates and delta-merge counts, and the composed-vs-digest
+throughput and mapping-phase ratios (the scene-granular win the ROADMAP
+queues).  ``--tiny`` shrinks the stream and ladder for CI smoke coverage —
+at toy scale the jitted batch build costs ~10 ms and composition shows
+parity; the full config (2048-cap buckets) is where the measured win lives
+(mapping 5.1x/2.9x, end-to-end 1.14x/1.05x — see ROADMAP PR-4).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks import common
+from repro.serve.bucketing import BucketLadder
+from repro.serve.engine import ARCHS, Engine, EngineStats
+from repro.serve.workload import churned_stream
+
+
+#: leading frames excluded from timing: they fill the scene store (and any
+#: first-touch caches), which is exactly the steady state the comparison is
+#: about — every variant gets the same treatment.
+WARM_FRAMES = 2
+
+#: (tag, table strategy, drive deltas through submit_delta, maps LRU size)
+VARIANTS = (("cold", "sort", False, 0),
+            ("digest", "sort", False, 32),
+            ("composed", "composed", False, 32),
+            ("delta", "incremental", True, 32))
+
+
+def _drive(arch: str, frames, bound: int, ladder: BucketLadder) -> dict:
+    """Run all variants **interleaved frame-by-frame** on co-resident warm
+    engines, so machine noise at any instant hits every variant equally
+    (the same reason bench_training interleaves its fp32/bf16 pairs)."""
+    engines = {}
+    for tag, strategy, use_delta, maps_cache in VARIANTS:
+        eng = Engine(arch, ladder=ladder, spatial_bound=bound,
+                     map_strategy=strategy, maps_cache_size=maps_cache)
+        eng.warmup()
+        eng.stats = EngineStats()
+        engines[tag] = (eng, use_delta)
+    frame_s = {tag: [] for tag in engines}
+    for frame in frames:
+        for tag, (eng, use_delta) in engines.items():
+            t0 = time.perf_counter()
+            for sid, scene, delta in frame:
+                if use_delta and delta is not None:
+                    eng.submit_delta(sid, delta)
+                else:
+                    eng.submit(scene, stream=sid)
+            eng.flush()
+            frame_s[tag].append(time.perf_counter() - t0)
+    streams = len(frames[0])
+    last_scenes = [scene for _, scene, _ in frames[-1]]
+    out = {}
+    for tag, (eng, _) in engines.items():
+        times = frame_s[tag]
+        measured = times[WARM_FRAMES:] if len(times) > WARM_FRAMES else times
+        med = sorted(measured)[len(measured) // 2]
+        s = eng.stats.summary()
+        sc = s["scene_tables"]
+        scene_total = max(sc["hits"] + sc["misses"], 1)
+        s["wall_scenes_per_s"] = streams / med   # median steady-state frame
+        # mapping-phase isolation: the batch map path alone (warm scene
+        # store, whole-batch LRU cleared each round) — the executor cost is
+        # common to every variant and would otherwise dilute the comparison.
+        # Group via plan() exactly as flushes do (a direct pack of all
+        # streams could overflow the largest bucket).
+        group_idx = eng.batcher.plan([s.num_points for s in last_scenes])[0]
+        group = [last_scenes[i] for i in group_idx]
+        batch = eng.batcher.pack(group)
+        m_times = []
+        for _ in range(5):
+            eng._map_store.clear()
+            t0 = time.perf_counter()
+            maps = eng._maps_for(batch, group)
+            jax.block_until_ready(jax.tree.leaves(maps))
+            m_times.append(time.perf_counter() - t0)
+        s["mapping_ms"] = sorted(m_times)[len(m_times) // 2] * 1e3
+        derived = (f"scenes_per_s={s['wall_scenes_per_s']:.2f};"
+                   f"median_frame_ms={med * 1e3:.1f};"
+                   f"mapping_ms={s['mapping_ms']:.1f};"
+                   f"p95_ms={s['p95_ms']:.1f};"
+                   f"map_hits={s['map_cache']['hits']};"
+                   f"map_misses={s['map_cache']['misses']};"
+                   f"scene_hit_rate={sc['hits'] / scene_total:.2f};"
+                   f"delta_merges={sc['delta_merges']}")
+        common.emit(f"streaming/{arch}/{tag}/p50", s["p50_ms"] * 1e3, derived)
+        out[tag] = s
+    return out
+
+
+def run(tiny: bool = False):
+    if tiny:
+        archs = ["centerpoint_waymo"]
+        streams, n_frames, n_range = 4, 8, (60, 150)
+        ladder = BucketLadder((256, 512), max_batch=4)
+        extent, voxel = 16.0, 0.4
+    else:
+        archs = sorted(ARCHS)
+        streams, n_frames, n_range = 6, 16, (150, 400)
+        ladder = BucketLadder((512, 1024, 2048), max_batch=6)
+        extent, voxel = 50.0, 0.4
+
+    for arch in archs:
+        channels = ARCHS[arch].in_channels_of(ARCHS[arch].default_config)
+        frames, bound = churned_stream(0, streams, n_frames, channels,
+                                       n_range=n_range, extent=extent,
+                                       voxel=voxel)
+        res = _drive(arch, frames, bound, ladder)
+        digest = max(res["digest"]["wall_scenes_per_s"], 1e-9)
+        for tag in ("composed", "delta"):
+            ratio = res[tag]["wall_scenes_per_s"] / digest
+            map_ratio = (res["digest"]["mapping_ms"]
+                         / max(res[tag]["mapping_ms"], 1e-9))
+            common.emit(f"streaming/{arch}/{tag}_vs_digest", 0.0,
+                        f"throughput_ratio={ratio:.2f}x;"
+                        f"mapping_speedup={map_ratio:.2f}x")
+        common.emit(f"streaming/{arch}/digest_vs_cold", 0.0,
+                    f"throughput_ratio="
+                    f"{digest / max(res['cold']['wall_scenes_per_s'], 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced stream for CI smoke runs")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(tiny=args.tiny)

@@ -19,11 +19,13 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_generator, bench_graph, bench_hybrid,
                             bench_inference, bench_kmap, bench_serving,
-                            bench_sorted, bench_splits, bench_training, common)
+                            bench_sorted, bench_splits, bench_streaming,
+                            bench_training, common)
 
     suites = [
         ("kmap_engine", bench_kmap.run),
         ("serving_engine", bench_serving.run),
+        ("streaming_serving", bench_streaming.run),
         ("fig14_inference", bench_inference.run),
         ("fig15_training", bench_training.run),
         ("tab34_sorted", bench_sorted.run),

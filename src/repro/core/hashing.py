@@ -38,6 +38,21 @@ bounds, or the ``INVALID_COORD`` padding sentinel) pack to the ``MISS`` key
 pack to ``PAD`` (int32 max), which sorts last.  Everything is int32 (x64
 stays disabled framework-wide).
 
+Composable tables (scene-granular and streaming reuse)
+------------------------------------------------------
+Because the batch index is the *most significant* key field, the sorted key
+array of a packed batch is exactly the batch-major concatenation of each
+scene's own sorted (batch-0) table with the batch bits added in.  Two O(N)
+merge primitives exploit that (Minuet's observation, lifted to first-class
+table operations):
+
+* ``compose_tables`` — build a batch table by merge-composing per-scene
+  sorted tables (one key-delta add + concatenation per scene; no argsort),
+  bit-identical to ``CoordTable.build`` on the packed batch;
+* ``CoordTable.delta_merge`` — update a streaming scene's table by merging
+  a small sorted insertion/eviction delta instead of re-sorting the full
+  cloud, bit-identical to a fresh build of the updated scene.
+
 (``SortedCoords``, the seed's multi-word reference table, and the
 ``engine="legacy"`` A/B flag in ``kmap.build_kmap`` were deleted after a
 release cycle of bit-identical cross-checks; the property tests now verify
@@ -48,10 +63,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _I32_MAX = int(jnp.iinfo(jnp.int32).max)
 
@@ -232,6 +248,29 @@ def keys_equal(a: jax.Array, b: jax.Array, words: int = 1) -> jax.Array:
     return jnp.all(a == b, axis=-1)
 
 
+def searchsorted_keys(sorted_keys: jax.Array, q: jax.Array, words: int = 1,
+                      side: str = "left") -> jax.Array:
+    """Insertion positions of ``q`` in packed sorted keys — the multi-word
+    generalization of ``jnp.searchsorted``.  Returns int32 positions in
+    ``[0, n]``."""
+    if words == 1:
+        return jnp.searchsorted(sorted_keys, q, side=side).astype(jnp.int32)
+    n = sorted_keys.shape[0]
+    m = q.shape[0]
+    if n == 0:
+        return jnp.zeros((m,), jnp.int32)
+    lo = jnp.zeros((m,), jnp.int32)
+    hi = jnp.full((m,), n, jnp.int32)
+    for _ in range(max(1, math.ceil(math.log2(max(n, 2))) + 1)):
+        active = lo < hi
+        mid = (lo + hi) // 2
+        row = sorted_keys[jnp.clip(mid, 0, n - 1)]
+        adv = _lex_less(row, q) if side == "left" else ~_lex_less(q, row)
+        lo = jnp.where(active & adv, mid + 1, lo)
+        hi = jnp.where(active & ~adv, mid, hi)
+    return lo
+
+
 def sort_keys(keys: jax.Array):
     """Argsort packed keys.  One argsort for scalar keys; one chained stable
     argsort per word (least-significant first) for multi-word keys.
@@ -293,6 +332,227 @@ class CoordTable:
         """Coordinate-row lookup: pack the query rows, search the table."""
         return self.lookup_keys(pack_keys(query_coords, self.spec,
                                           valid=valid, query=True))
+
+    def delta_merge(self, removed_coords: jax.Array,
+                    added_coords: jax.Array) -> "CoordTable":
+        """Streaming-frame table update: merge a small sorted delta instead
+        of re-sorting the full cloud.
+
+        Requires an *exact-size* table (every row valid, all keys unique —
+        the per-scene tables the serving engine caches).  ``removed_coords``
+        must all be present (each exactly once) and ``added_coords`` absent.
+        The result is bit-identical to ``CoordTable.build`` on the updated
+        scene whose row layout is ``[kept rows in original order, then
+        added rows]`` — exactly what ``serve.batcher.apply_delta`` produces.
+
+        Cost: two O(r+a) binary-search passes plus O(N) compaction/scatter —
+        no O(N log N) argsort of the full cloud.
+        """
+        spec = self.spec
+        w = spec.words
+        n = self.n
+        r = int(removed_coords.shape[0])
+        a = int(added_coords.shape[0])
+        n_keep = n - r
+        assert n_keep >= 0, (n, r)
+        sk, order = self.sorted_keys, self.order
+        if r:
+            rk = pack_keys(jnp.asarray(removed_coords, jnp.int32), spec,
+                           query=True)
+            pos = jnp.clip(searchsorted_keys(sk, rk, w, side="left"), 0, n - 1)
+            keep = jnp.ones((n,), bool).at[pos].set(False)
+            # removal shifts every later row index down by the number of
+            # removed rows before it (the fresh build's compacted layout)
+            ind = jnp.zeros((n,), jnp.int32).at[order[pos]].set(1)
+            shift = jnp.cumsum(ind)
+            order = (order - shift[order]).astype(jnp.int32)
+        else:
+            keep = jnp.ones((n,), bool)
+        dest = jnp.where(keep, jnp.cumsum(keep).astype(jnp.int32) - 1, n_keep)
+        kept_keys = jnp.full((n_keep + 1,) + sk.shape[1:], _I32_MAX,
+                             jnp.int32).at[dest].set(sk, mode="drop")[:n_keep]
+        kept_order = jnp.zeros((n_keep + 1,), jnp.int32).at[dest].set(
+            order, mode="drop")[:n_keep]
+        if not a:
+            return CoordTable(spec, kept_keys, kept_order)
+        ak = pack_keys(jnp.asarray(added_coords, jnp.int32), spec)
+        add_perm, add_sorted = sort_keys(ak)
+        add_order = (n_keep + add_perm).astype(jnp.int32)
+        # stable two-way merge: scatter both sorted runs at their final ranks
+        pos_k = jnp.arange(n_keep, dtype=jnp.int32) + \
+            searchsorted_keys(add_sorted, kept_keys, w, side="left")
+        pos_a = jnp.arange(a, dtype=jnp.int32) + \
+            searchsorted_keys(kept_keys, add_sorted, w, side="right")
+        out_keys = (jnp.zeros((n_keep + a,) + sk.shape[1:], jnp.int32)
+                    .at[pos_k].set(kept_keys).at[pos_a].set(add_sorted))
+        out_order = (jnp.zeros((n_keep + a,), jnp.int32)
+                     .at[pos_k].set(kept_order).at[pos_a].set(add_order))
+        return CoordTable(spec, out_keys, out_order)
+
+
+def np_pack_keys(coords: np.ndarray, spec: KeySpec) -> np.ndarray:
+    """Numpy twin of ``pack_keys`` for in-range, all-valid rows (the
+    host-side streaming path packs delta rows; bounds are the caller's
+    declared promise)."""
+    c = np.asarray(coords, np.int32)
+    if spec.raw:
+        return c
+    lo = np.zeros(c.shape[:-1], np.int64)
+    hi = np.zeros(c.shape[:-1], np.int64)
+    for f, (word, shift, width) in enumerate(spec.layout()):
+        val = c[..., f].astype(np.int64)
+        if f > 0:
+            val = val + (1 << (width - 1))
+        if word == 0:
+            lo += val << shift
+        else:
+            hi += val << shift
+    if spec.words == 1:
+        return lo.astype(np.int32)
+    return np.stack([hi, lo], axis=-1).astype(np.int32)
+
+
+def _np_cmp_keys(keys: np.ndarray, words: int) -> Optional[np.ndarray]:
+    """Collapse packed keys into one order-isomorphic comparable numpy
+    array: identity for scalar keys, a signed-int64 fold for [hi, lo]
+    pairs, None for wider (raw) keys."""
+    if words == 1:
+        return keys
+    if words == 2:
+        return (keys[..., 0].astype(np.int64) * (1 << 32)
+                + (keys[..., 1].astype(np.int64) - np.iinfo(np.int32).min))
+    return None
+
+
+def np_delta_merge(spec: KeySpec, keys: np.ndarray, order: np.ndarray,
+                   removed_coords: np.ndarray, added_coords: np.ndarray):
+    """Host-side twin of ``CoordTable.delta_merge`` on numpy arrays — the
+    serving engine's streaming hot path (scene tables live on the host, and
+    numpy has no per-shape compile cost).  Same contract: exact-size sorted
+    table, removed rows present, added rows absent; returns ``(keys,
+    order)`` bit-identical to a fresh build of ``[kept rows in original
+    order, then added rows]``.  Raw (>2-word) specs fall back to one stable
+    lexsort of the merged key set — still host-only, still exact."""
+    keys = np.asarray(keys)
+    order = np.asarray(order, np.int32)
+    n = keys.shape[0]
+    r = removed_coords.shape[0]
+    a = added_coords.shape[0]
+    cmp_keys = _np_cmp_keys(keys, spec.words)
+    if r:
+        rm = np_pack_keys(removed_coords, spec)
+        if cmp_keys is None:
+            keep = np.ones((n,), bool)
+            view = {tuple(k): i for i, k in enumerate(keys)}
+            pos = np.asarray([view[tuple(k)] for k in rm], np.int64)
+        else:
+            pos = np.searchsorted(cmp_keys, _np_cmp_keys(rm, spec.words))
+            keep = np.ones((n,), bool)
+        keep[pos] = False
+        ind = np.zeros((n,), np.int32)
+        ind[order[pos]] = 1
+        shift = np.cumsum(ind).astype(np.int32)
+        order = order - shift[order]
+    else:
+        keep = np.ones((n,), bool)
+    kept_keys, kept_order = keys[keep], order[keep]
+    n_keep = n - r
+    if not a:
+        return kept_keys, kept_order
+    ak = np_pack_keys(added_coords, spec)
+    ak_cmp = _np_cmp_keys(ak, spec.words)
+    if ak_cmp is None:   # raw fallback: one stable host lexsort, no device
+        merged = np.concatenate([kept_keys, ak])
+        morder = np.concatenate([kept_order,
+                                 n_keep + np.arange(a, dtype=np.int32)])
+        perm = lex_argsort_np(merged)
+        return merged[perm], morder[perm]
+    perm = np.argsort(ak_cmp, kind="stable").astype(np.int32)
+    ak, ak_cmp = ak[perm], ak_cmp[perm]
+    add_order = (n_keep + perm).astype(np.int32)
+    kept_cmp = _np_cmp_keys(kept_keys, spec.words)
+    pos_k = np.arange(n_keep) + np.searchsorted(ak_cmp, kept_cmp, side="left")
+    pos_a = np.arange(a) + np.searchsorted(kept_cmp, ak_cmp, side="right")
+    out_keys = np.empty((n_keep + a,) + keys.shape[1:], np.int32)
+    out_order = np.empty((n_keep + a,), np.int32)
+    out_keys[pos_k], out_keys[pos_a] = kept_keys, ak
+    out_order[pos_k], out_order[pos_a] = kept_order, add_order
+    return out_keys, out_order
+
+
+def lex_argsort_np(words: np.ndarray) -> np.ndarray:
+    """Stable lexicographic argsort of (N, W) int32 rows, MSB-first — the
+    numpy twin of ``lex_argsort``."""
+    return np.lexsort(words.T[::-1]).astype(np.int32)
+
+
+def batch_key_delta(spec: KeySpec, batch_id: int) -> np.ndarray:
+    """Additive key delta rebasing a batch-0 key row to ``batch_id``.
+
+    Returns an ``(spec.words,)`` int32 vector in the same MSB-first column
+    order as the packed keys (scalar layouts use the single entry).  Valid
+    because the batch field of a batch-0 key is all zeros, so adding the
+    shifted batch value equals packing with ``batch_id`` directly.
+    """
+    b = int(batch_id)
+    d = np.zeros((spec.words,), np.int32)
+    if spec.raw:
+        d[0] = b          # raw keys ARE the coordinate columns, batch first
+        return d
+    word, shift, width = spec.layout()[0]
+    assert 0 <= b < (1 << width), (b, width)
+    # MSB-first column order: the batch field always lands in the highest
+    # word (it is placed last / most significant), i.e. column 0.
+    assert word == spec.words - 1, (word, spec.words)
+    d[0] = np.int32(b << shift)
+    return d
+
+
+def rebase_batch_keys(keys, spec: KeySpec, batch_id: int):
+    """Rebase batch-0 keys (numpy or jax, ``(n,)`` or ``(n, W)``) to
+    ``batch_id`` by adding the batch-field delta."""
+    d = batch_key_delta(spec, batch_id)
+    if keys.ndim == 1:
+        return keys + d[0]
+    return keys + d[None, :]
+
+
+def compose_tables(spec: KeySpec,
+                   parts: Sequence[Tuple[np.ndarray, Optional[np.ndarray],
+                                         int, int]],
+                   capacity: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Merge-compose per-scene sorted batch-0 tables into one batch table.
+
+    ``parts``: per scene, in batch order: ``(sorted_keys, order_or_None,
+    batch_id, row_offset)`` where the arrays are the scene's *exact-size*
+    sorted table (no padding) and ``row_offset`` is the scene's first row in
+    the packed batch.  Because the batch index is the most significant key
+    field and scenes are packed batch-major, the k-way merge degenerates to
+    a concatenation: O(N) total, no argsort.  Padding rows (``PAD`` keys;
+    order ``arange(total, capacity)``) reproduce a fresh build's stable-sort
+    layout exactly, so the result is bit-identical to ``CoordTable.build``
+    on the packed batch.  Host-side numpy (the serving engine composes on
+    the host); wrap in ``CoordTable`` after ``jnp.asarray``.
+    """
+    key_parts, order_parts = [], []
+    with_order = bool(parts) and parts[0][1] is not None
+    total = 0
+    for keys, order, batch_id, row_offset in parts:
+        keys = np.asarray(keys)
+        key_parts.append(rebase_batch_keys(keys, spec, batch_id)
+                         .astype(np.int32, copy=False))
+        if with_order:
+            order_parts.append(np.asarray(order, np.int32) + np.int32(row_offset))
+        total += keys.shape[0]
+    assert total <= capacity, (total, capacity)
+    tail_shape = (capacity - total,) + key_parts[0].shape[1:] if key_parts \
+        else (capacity,) + ((spec.words,) if spec.words > 1 else ())
+    key_parts.append(np.full(tail_shape, _I32_MAX, np.int32))
+    keys = np.concatenate(key_parts)
+    if not with_order:
+        return keys, None
+    order_parts.append(np.arange(total, capacity, dtype=np.int32))
+    return keys, np.concatenate(order_parts)
 
 
 # ---------------------------------------------------------------------------

@@ -50,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -144,6 +144,7 @@ class MapCache:
     def __init__(self, spec: KeySpec):
         self.spec = spec
         self._tables: dict = {}
+        self._stride_tables: dict = {}
         self.hits = 0
         self.misses = 0
 
@@ -168,11 +169,24 @@ class MapCache:
         self._tables.setdefault(id(coords) if key is None else key,
                                 (coords, table))
 
+    def adopt_for_stride(self, out_stride: int, table: CoordTable,
+                         n_out) -> None:
+        """Pre-adopt a *composed* output table for the strided map at
+        ``out_stride`` (before its output coordinates exist): ``build_kmap``
+        then skips the floor-grid unique argsort entirely and derives the
+        output coords from the table.  ``n_out`` may be a host int or a
+        traced scalar (the composed valid-row count)."""
+        self._stride_tables[out_stride] = (table, n_out)
+
+    def table_for_stride(self, out_stride: int):
+        return self._stride_tables.get(out_stride)
+
     def clear(self) -> None:
         self._tables.clear()
+        self._stride_tables.clear()
 
     def __len__(self) -> int:
-        return len(self._tables)
+        return len(self._tables) + len(self._stride_tables)
 
 
 def _unique_coords(coords: jax.Array, valid: jax.Array, capacity: int):
@@ -336,8 +350,20 @@ def build_kmap(x: SparseTensor, kernel_size: int, stride: int = 1,
     else:
         out_stride = t * stride
         n_out_cap = out_capacity or cap_in
-        uniq = _unique_from_keys(table, out_stride, n_out_cap)
-        if uniq is not None:
+        pre = cache.table_for_stride(out_stride) if cache is not None else None
+        use_pre = pre is not None and pre[0].n == n_out_cap
+        uniq = None if use_pre else \
+            _unique_from_keys(table, out_stride, n_out_cap)
+        if use_pre:
+            # composed child table (scene-granular serving reuse): the
+            # output coords ARE the unpacked table keys — no unique argsort
+            child_table, n_out = pre
+            n_out = jnp.asarray(n_out, jnp.int32)
+            key_valid = jnp.arange(n_out_cap) < n_out
+            out_coords = jnp.where(key_valid[:, None],
+                                   hashing.unpack_keys(child_table.sorted_keys,
+                                                       spec), INVALID_COORD)
+        elif uniq is not None:
             out_coords, n_out, child_table = uniq
         else:
             # non-power-of-two stride (or too-narrow fields): fall back to
@@ -397,6 +423,179 @@ def transpose_kmap(fwd: KernelMap, x_fine: SparseTensor) -> KernelMap:
     return KernelMap(m_out=m_out, out_coords=x_fine.coords, n_out=x_fine.num_valid,
                      ws_in=fwd.ws_out, ws_out=fwd.ws_in, ws_count=fwd.ws_count,
                      bitmask=bm, out_stride=x_fine.stride, kernel_size=fwd.kernel_size)
+
+
+# ---------------------------------------------------------------------------
+# Scene-granular composition (Minuet §4 proper: compose per-scene cached
+# mapping work into batch-level structures instead of digesting whole batches)
+# ---------------------------------------------------------------------------
+#
+# Batch bits are the most significant key field, so every sorted structure of
+# a packed batch — the coordinate table at every pyramid level, and therefore
+# every kernel map built on those tables — is the batch-major concatenation
+# of the corresponding per-scene (batch-0) structure with index offsets added
+# in.  The helpers below exploit that at two granularities:
+#
+# * ``scene_table_ladder`` + ``compose_batch_tables`` — per-scene sorted
+#   table ladders merge-composed into batch tables (adopted into a MapCache
+#   via ``build_maps_from_specs(..., tables=...)``, killing every argsort of
+#   a batch map build);
+# * ``compose_kmaps`` — per-scene *kernel map* stacks concatenated into the
+#   batch map stack (host-side numpy, no device compute at all): warm scenes
+#   skip mapping entirely; only cold scenes ever build maps, at their own
+#   size.  Bit-identical to a fresh batch build (tests/test_streaming.py).
+
+
+@dataclasses.dataclass
+class SceneEntry:
+    """Cached per-scene mapping work, keyed by the scene's content digest.
+
+    n:          scene row count (level-1 size).
+    sizes:      tensor-stride -> per-scene row count at that pyramid level.
+    maps:       map ref -> numpy kernel-map fields plus the static metadata
+                composition needs (``in_stride``/``out_stride``/``kernel``).
+    root_keys/root_order: the scene's sorted batch-0 CoordTable — the object
+                ``CoordTable.delta_merge`` updates on streaming frames.
+    """
+
+    n: int
+    sizes: Dict[int, int]
+    maps: Dict[tuple, dict]
+    root_keys: np.ndarray
+    root_order: np.ndarray
+
+
+def scene_table_ladder(coords: np.ndarray, spec: KeySpec,
+                       down_strides: Sequence[int]) -> Dict[int, tuple]:
+    """Per-scene sorted table ladder for batch composition.
+
+    coords: (n, 1+D) batch-0 rows, all valid (exact size, no padding).
+    down_strides: ascending out-strides of the plan's "down" maps.
+    Returns {tensor_stride: (sorted_keys, order_or_None, n)} as numpy — the
+    root level keeps its row order; deeper levels are identity-order unique
+    key arrays (exactly what a strided map's adopted child table holds).
+    Stops early when a stride's floor-grid masking doesn't apply (non-pow2
+    stride / too-narrow fields) — composition then covers the upper levels.
+    """
+    n = coords.shape[0]
+    table = CoordTable.build(jnp.asarray(coords), jnp.ones((n,), bool), spec)
+    ladder = {1: (np.asarray(table.sorted_keys), np.asarray(table.order), n)}
+    cur, cur_n = table, n
+    for s in sorted(down_strides):
+        res = _unique_from_keys(cur, s, cur_n)
+        if res is None:
+            break
+        _, n_out, child = res
+        m = int(n_out)
+        keys = np.asarray(child.sorted_keys)[:m]
+        ladder[s] = (keys, None, m)
+        cur = CoordTable.from_sorted_keys(spec, jnp.asarray(keys))
+        cur_n = m
+    return ladder
+
+
+def compose_batch_tables(spec: KeySpec, ladders: Sequence[Dict[int, tuple]],
+                         capacity: int) -> Dict[int, tuple]:
+    """Compose per-scene table ladders (batch order) into batch tables.
+
+    Returns {tensor_stride: (keys, order_or_None, n)} as device arrays — the
+    ``tables=`` argument of ``plan.build_maps_from_specs``, covering every
+    level present in *all* ladders.  O(N) concatenation per level.
+    """
+    strides = set(ladders[0])
+    for lad in ladders[1:]:
+        strides &= set(lad)
+    out: Dict[int, tuple] = {}
+    for s in sorted(strides):
+        off = 0
+        parts = []
+        for b, lad in enumerate(ladders):
+            keys, order, n = lad[s]
+            parts.append((keys, order, b, off))
+            off += n
+        keys, order = hashing.compose_tables(spec, parts, capacity)
+        out[s] = (jnp.asarray(keys),
+                  None if order is None else jnp.asarray(order),
+                  jnp.asarray(off, jnp.int32))
+    return out
+
+
+def compose_kmaps(entries: Sequence[SceneEntry],
+                  capacity: int) -> Optional[Dict[tuple, KernelMap]]:
+    """Concatenate per-scene kernel-map stacks into the batch map stack.
+
+    entries: cached SceneEntry per scene, in batch (= packing) order.
+    capacity: the batch bucket capacity every composed map is padded to.
+
+    Pure host-side numpy — scene blocks are copied with their input/output
+    row offsets added (misses stay -1), weight-stationary lists concatenate
+    valid prefixes per offset (scene blocks are already hits-first in row
+    order), bitmasks/coords concatenate with the batch column rewritten.
+    Returns None when composition does not apply (an empty scene, or a level
+    size exceeding the capacity).
+    """
+    if not entries or any(e.n == 0 for e in entries):
+        return None
+    strides = set(entries[0].sizes)
+    for e in entries[1:]:
+        strides &= set(e.sizes)
+    offs = {s: np.cumsum([0] + [e.sizes[s] for e in entries]) for s in strides}
+    if any(offs[s][-1] > capacity for s in strides):
+        return None
+    maps: Dict[tuple, KernelMap] = {}
+    for ref in entries[0].maps:
+        m0 = entries[0].maps[ref]
+        in_s, out_s = m0["in_stride"], m0["out_stride"]
+        if in_s not in strides or out_s not in strides:
+            return None
+        kd = m0["m_out"].shape[1]
+        d1 = m0["out_coords"].shape[1]
+        m_out = np.full((capacity, kd), -1, np.int32)
+        oc = np.full((capacity, d1), int(INVALID_COORD), np.int32)
+        bm = np.zeros((capacity,), np.int32)
+        for b, e in enumerate(entries):
+            sm = e.maps[ref]
+            n_o = e.sizes[out_s]
+            off_in, off_out = int(offs[in_s][b]), int(offs[out_s][b])
+            blk = sm["m_out"][:n_o]
+            m_out[off_out:off_out + n_o] = np.where(blk >= 0, blk + off_in, -1)
+            c = sm["out_coords"][:n_o].copy()
+            c[:, 0] = b
+            oc[off_out:off_out + n_o] = c
+            bm[off_out:off_out + n_o] = sm["bitmask"][:n_o]
+        transpose_of = m0.get("transpose_of")
+        if transpose_of is not None and transpose_of in maps:
+            # a fresh batch build derives an up map's pair lists by swapping
+            # the forward strided map's (transpose_kmap) — mirror that
+            # exactly, from the already-composed down map (map-spec order
+            # puts downs before ups), so slot layout matches bit-for-bit
+            # even when scene rows are not lexicographically sorted
+            fwd = maps[transpose_of]
+            ws_in_j, ws_out_j, wc_j = fwd.ws_out, fwd.ws_in, fwd.ws_count
+        else:
+            # weight-stationary lists re-derived from the composed m_out in
+            # one vectorized pass — hits first in row order per offset
+            # column, the exact ``_compact_ws`` layout (scene blocks are
+            # row-ordered, so this equals concatenating the per-scene valid
+            # prefixes)
+            ws_in = np.full((kd, capacity), -1, np.int32)
+            ws_out = np.full((kd, capacity), -1, np.int32)
+            hit = m_out >= 0
+            k_idx, row_idx = np.nonzero(hit.T)  # sorted by offset, then row
+            counts = hit.sum(axis=0)
+            slot = np.arange(k_idx.size) - np.concatenate(
+                [[0], np.cumsum(counts)[:-1]])[k_idx]
+            ws_in[k_idx, slot] = m_out[row_idx, k_idx]
+            ws_out[k_idx, slot] = row_idx
+            ws_in_j, ws_out_j = jnp.asarray(ws_in), jnp.asarray(ws_out)
+            wc_j = jnp.asarray(counts.astype(np.int32))
+        maps[ref] = KernelMap(
+            m_out=jnp.asarray(m_out), out_coords=jnp.asarray(oc),
+            n_out=jnp.asarray(int(offs[out_s][-1]), jnp.int32),
+            ws_in=ws_in_j, ws_out=ws_out_j, ws_count=wc_j,
+            bitmask=jnp.asarray(bm), out_stride=int(out_s),
+            kernel_size=int(m0["kernel_size"]))
+    return maps
 
 
 # ---------------------------------------------------------------------------

@@ -44,13 +44,15 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dataflows as df
 from repro.core import generator
 from repro.core import precision as prec
 from repro.core.autotuner import (Autotuner, TrainingAutotuner,
                                   partition_groups)
-from repro.core.kmap import MapCache, build_kmap, transpose_kmap
+from repro.core.hashing import CoordTable
+from repro.core.kmap import MapCache, SceneEntry, build_kmap, transpose_kmap
 from repro.core.precision import FP32, PrecisionPolicy
 from repro.core.sparse_conv import (ConvSpec, TrainDataflowConfig, apply_conv)
 from repro.core.sparse_tensor import SparseTensor
@@ -172,9 +174,19 @@ class KmapSpec:
     tensor_stride: int
     adopts_output_table: bool = False
     transpose_of: Optional[Tuple] = None
+    table: str = "sort"
+
+    #: coordinate-table strategies: "sort" rebuilds every table with a fresh
+    #: argsort; "composed" allows scene-granular merge-composition of cached
+    #: per-scene tables/maps (serving); "incremental" additionally allows
+    #: streaming frames to delta-merge their scene table.  A declared,
+    #: serializable, tunable axis like dataflow — builders without composed
+    #: inputs simply fall back to "sort" semantics.
+    TABLE_STRATEGIES = ("sort", "composed", "incremental")
 
     def __post_init__(self):
         assert self.kind in ("sub", "down", "up"), self.kind
+        assert self.table in self.TABLE_STRATEGIES, self.table
         if self.kind == "up":
             assert self.transpose_of is not None
 
@@ -184,7 +196,8 @@ class KmapSpec:
                 "tensor_stride": self.tensor_stride,
                 "adopts_output_table": self.adopts_output_table,
                 "transpose_of": (None if self.transpose_of is None
-                                 else list(self.transpose_of))}
+                                 else list(self.transpose_of)),
+                "table": self.table}
 
     @staticmethod
     def from_dict(d: dict) -> "KmapSpec":
@@ -197,7 +210,8 @@ class KmapSpec:
                         kernel_size=d["kernel_size"], stride=d["stride"],
                         tensor_stride=d["tensor_stride"],
                         adopts_output_table=d.get("adopts_output_table", False),
-                        transpose_of=None if t is None else tuple(t))
+                        transpose_of=None if t is None else tuple(t),
+                        table=d.get("table", "sort"))
 
 
 #: Structural ops of the execution program.  ("conv", name) runs a LayerPlan;
@@ -220,34 +234,56 @@ class ModelDecl:
 
 
 def pyramid_map_specs(levels: int, with_up: bool,
-                      sub_kernel: int = 3, down_kernel: int = 2) -> Tuple[KmapSpec, ...]:
+                      sub_kernel: int = 3, down_kernel: int = 2,
+                      table: str = "sort") -> Tuple[KmapSpec, ...]:
     """The standard encoder(/decoder) map program: a submanifold map per
     stride level, a strided map per downsample (adopting its output table),
-    and — for U-Nets — transposed maps reusing the forward strided maps."""
-    specs = [KmapSpec(("sub", 1), "sub", sub_kernel, 1, 1)]
+    and — for U-Nets — transposed maps reusing the forward strided maps.
+    ``table`` declares the coordinate-table strategy for the whole program
+    (see ``KmapSpec.TABLE_STRATEGIES``)."""
+    specs = [KmapSpec(("sub", 1), "sub", sub_kernel, 1, 1, table=table)]
     stride = 1
     for _ in range(levels):
         specs.append(KmapSpec(("down", stride), "down", down_kernel, 2, stride,
-                              adopts_output_table=True))
+                              adopts_output_table=True, table=table))
         stride *= 2
-        specs.append(KmapSpec(("sub", stride), "sub", sub_kernel, 1, stride))
+        specs.append(KmapSpec(("sub", stride), "sub", sub_kernel, 1, stride,
+                              table=table))
     if with_up:
         for lvl in range(levels - 1, -1, -1):
             s = 2 ** lvl
             specs.append(KmapSpec(("up", s), "up", down_kernel, 2, s,
-                                  transpose_of=("down", s)))
+                                  transpose_of=("down", s), table=table))
     return tuple(specs)
 
 
 def build_maps_from_specs(specs: Sequence[KmapSpec], st: SparseTensor,
-                          cache: Optional[MapCache] = None) -> dict:
+                          cache: Optional[MapCache] = None,
+                          tables: Optional[dict] = None) -> dict:
     """Execute a kernel-map program.  One ``MapCache`` spans the pyramid:
     submanifold and strided maps at a stride share one sorted table, and
     each ``adopts_output_table`` edge seeds the next level's table for free.
     A caller-supplied warm ``cache`` (the serving engine) is used as-is;
-    never reuse one across ``jit`` traces."""
+    never reuse one across ``jit`` traces.
+
+    ``tables``: optional pre-composed coordinate tables, as produced by
+    ``kmap.compose_batch_tables`` — {tensor_stride: (sorted_keys, order,
+    n_valid)}.  The entry at ``st.stride`` (its row order is required)
+    replaces the root argsort; deeper entries (identity order, ``order``
+    None) are adopted per out-stride so the strided maps skip their
+    floor-grid unique argsorts too.  Levels absent from ``tables`` build
+    normally — composition degrades gracefully, never changes results.
+    """
     if cache is None:   # NOT `or`: an empty caller cache is falsy but wanted
         cache = MapCache.for_tensor(st)
+    if tables:
+        for s, (keys, order, n) in sorted(tables.items()):
+            if s == st.stride:
+                assert order is not None, "the root table needs its row order"
+                cache.adopt(st.coords, CoordTable(cache.spec, keys, order))
+            else:
+                cache.adopt_for_stride(s, CoordTable.from_sorted_keys(
+                    cache.spec, keys), n)
     maps: dict = {}
     tensors = {st.stride: st}
     for ms in specs:
@@ -265,6 +301,62 @@ def build_maps_from_specs(specs: Sequence[KmapSpec], st: SparseTensor,
         else:  # "up"
             maps[ms.ref] = transpose_kmap(maps[ms.transpose_of], cur)
     return maps
+
+
+def scene_entry_arrays(map_specs: Sequence[KmapSpec], st: SparseTensor,
+                       root_table: Optional[CoordTable] = None):
+    """The traceable core of a per-scene mapping build: the kernel-map
+    stack plus the scene's sorted root table arrays.  ``st`` is a
+    single-scene tensor (batch column 0, padding allowed — the serving
+    engine buckets scene capacities so this jits once per rung).
+
+    root_table: an already-merged ``CoordTable`` for ``st`` (streaming
+    delta path) — adopted so the build skips the scene's root argsort.
+    """
+    cache = MapCache.for_tensor(st)
+    if root_table is not None:
+        cache.adopt(st.coords, root_table)
+    maps = build_maps_from_specs(map_specs, st, cache)
+    root = cache.table(st)   # cache hit: the table the build sorted/adopted
+    return maps, root.sorted_keys, root.order
+
+
+def scene_entry_from_arrays(map_specs: Sequence[KmapSpec], maps: dict,
+                            n: int, root_keys, root_order,
+                            root_stride: int = 1) -> SceneEntry:
+    """Extract the host-side ``SceneEntry`` from a (possibly padded) scene
+    build: numpy kernel-map fields, per-level valid row counts, and the
+    root table trimmed to its valid prefix (PAD keys sort last, so the
+    first ``n`` entries ARE the exact-size table delta-merge expects)."""
+    sizes = {root_stride: n}
+    entry_maps: dict = {}
+    for ms in map_specs:
+        km = maps[ms.ref]
+        if ms.kind == "down":
+            sizes[km.out_stride] = int(km.n_out)
+        entry_maps[ms.ref] = {
+            "m_out": np.asarray(km.m_out),
+            "out_coords": np.asarray(km.out_coords),
+            "ws_in": np.asarray(km.ws_in), "ws_out": np.asarray(km.ws_out),
+            "ws_count": np.asarray(km.ws_count),
+            "bitmask": np.asarray(km.bitmask),
+            "in_stride": ms.tensor_stride * (ms.stride if ms.kind == "up"
+                                             else 1),
+            "out_stride": km.out_stride, "kernel_size": km.kernel_size,
+            "transpose_of": ms.transpose_of}
+    return SceneEntry(n=n, sizes=sizes, maps=entry_maps,
+                      root_keys=np.asarray(root_keys)[:n],
+                      root_order=np.asarray(root_order)[:n])
+
+
+def build_scene_entry(map_specs: Sequence[KmapSpec], st: SparseTensor,
+                      root_table: Optional[CoordTable] = None) -> SceneEntry:
+    """Build one scene's cached mapping work for scene-granular composition
+    (eager convenience wrapper; the serving engine jits
+    ``scene_entry_arrays`` per scene-capacity rung instead)."""
+    maps, keys, order = scene_entry_arrays(map_specs, st, root_table)
+    return scene_entry_from_arrays(map_specs, maps, int(st.num_valid),
+                                   keys, order, root_stride=st.stride)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -305,6 +397,20 @@ class NetworkPlan:
         layers = tuple(dataclasses.replace(lp, dataflow=assignment[lp.sig])
                        if lp.sig in assignment else lp for lp in self.layers)
         return dataclasses.replace(self, layers=layers)
+
+    @property
+    def table_strategy(self) -> str:
+        """The map program's declared coordinate-table strategy ("sort" /
+        "composed" / "incremental") — read off the root spec."""
+        return self.map_specs[0].table if self.map_specs else "sort"
+
+    def with_table_strategy(self, strategy: str) -> "NetworkPlan":
+        """Rebind the coordinate-table strategy (a tunable axis like
+        dataflow) on every map spec of the program."""
+        assert strategy in KmapSpec.TABLE_STRATEGIES, strategy
+        specs = tuple(dataclasses.replace(ms, table=strategy)
+                      for ms in self.map_specs)
+        return dataclasses.replace(self, map_specs=specs)
 
     def with_precision(self, policy) -> "NetworkPlan":
         """Rebind the numeric policy: one policy for the whole network, or a
@@ -355,9 +461,9 @@ class NetworkPlan:
                             for k, v in params[lp.name].items()}
         return out
 
-    def build_maps(self, st: SparseTensor,
-                   cache: Optional[MapCache] = None) -> dict:
-        return build_maps_from_specs(self.map_specs, st, cache)
+    def build_maps(self, st: SparseTensor, cache: Optional[MapCache] = None,
+                   tables: Optional[dict] = None) -> dict:
+        return build_maps_from_specs(self.map_specs, st, cache, tables=tables)
 
     def apply(self, params: dict, st: SparseTensor,
               maps: Optional[dict] = None, bn_mode: str = "batch") -> jax.Array:

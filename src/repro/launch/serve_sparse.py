@@ -21,11 +21,12 @@ from repro.serve.workload import lidar_stream
 
 
 def build_engine(arch: str, buckets, max_batch: int, spatial_bound: int,
-                 plans_path=None, seed: int = 0) -> Engine:
+                 plans_path=None, seed: int = 0,
+                 map_strategy=None) -> Engine:
     ladder = BucketLadder(tuple(buckets), max_batch=max_batch)
     plans = PlanRegistry.load(plans_path) if plans_path else None
     return Engine(arch, ladder=ladder, spatial_bound=spatial_bound,
-                  plans=plans, seed=seed)
+                  plans=plans, seed=seed, map_strategy=map_strategy)
 
 
 def main(argv=None):
@@ -47,6 +48,10 @@ def main(argv=None):
     ap.add_argument("--tune", action="store_true",
                     help="run the Sparse Autotuner on a sample batch and "
                          "persist the assignment before serving")
+    ap.add_argument("--map-strategy", default=None,
+                    choices=["sort", "composed", "incremental"],
+                    help="coordinate-table strategy override (default: the "
+                         "plan's declared KmapSpec.table axis)")
     ap.add_argument("--tiny", action="store_true",
                     help="reduced stream/ladder for smoke runs")
     ap.add_argument("--seed", type=int, default=0)
@@ -62,7 +67,8 @@ def main(argv=None):
     scenes, bound = lidar_stream(args.seed, args.scenes, channels,
                                  n_range=(args.min_points, args.max_points))
     engine = build_engine(args.arch, buckets, args.max_batch, bound,
-                          plans_path=args.plans, seed=args.seed)
+                          plans_path=args.plans, seed=args.seed,
+                          map_strategy=args.map_strategy)
 
     if args.tune:
         sample = scenes[:min(2, len(scenes))]
@@ -88,6 +94,10 @@ def main(argv=None):
           f"({sum(warm['recompiles'].values())} during warmup)")
     print(f"map cache: {s['map_cache']['hits']} hits / "
           f"{s['map_cache']['misses']} misses")
+    sc = s["scene_tables"]
+    print(f"scene store [{engine.map_strategy}]: {sc['hits']} hits / "
+          f"{sc['misses']} misses, {sc['composed_batches']} composed batches, "
+          f"{sc['delta_merges']} delta merges")
     out = results[0]
     print(f"sample result: {out.feats.shape[0]} rows x {out.feats.shape[1]} ch "
           f"@ stride {out.stride}")

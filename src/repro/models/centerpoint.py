@@ -65,7 +65,8 @@ def declare(cfg: CenterPointConfig) -> ModelDecl:
         cin = c
     return ModelDecl(arch="centerpoint", layers=tuple(layers), ops=tuple(ops),
                      map_specs=pyramid_map_specs(len(cfg.channels),
-                                                 with_up=False))
+                                                 with_up=False,
+                                                 table="composed"))
 
 
 def network_plan(cfg: CenterPointConfig,
@@ -79,14 +80,17 @@ def layer_signatures(cfg: CenterPointConfig) -> Dict[str, tuple]:
     return {lp.name: lp.sig for lp in declare(cfg).layers}
 
 
-def build_maps(st: SparseTensor, cache: Optional[MapCache] = None) -> dict:
+def build_maps(st: SparseTensor, cache: Optional[MapCache] = None,
+               tables: Optional[dict] = None) -> dict:
     """One ``MapCache`` across the stage ladder: the stem/submanifold and
     strided convs at each stride share a sorted coordinate table, and each
     downsample's declared ``adopts_output_table`` edge seeds the next
     stage's table for free.  A prebuilt warm ``cache`` may be passed
-    (serving engine); never reuse one across ``jit`` traces."""
+    (serving engine); never reuse one across ``jit`` traces.  ``tables``:
+    pre-composed coordinate tables (scene-granular serving reuse; see
+    ``plan.build_maps_from_specs``)."""
     return planlib.build_maps_from_specs(pyramid_map_specs(4, with_up=False),
-                                         st, cache)
+                                         st, cache, tables=tables)
 
 
 def apply(params, st: SparseTensor, cfg: CenterPointConfig,

@@ -109,7 +109,8 @@ def declare(cfg: MinkUNetConfig) -> ModelDecl:
 
     return ModelDecl(arch="minkunet", layers=tuple(layers), ops=tuple(ops),
                      map_specs=pyramid_map_specs(len(cfg.enc_channels),
-                                                 with_up=True))
+                                                 with_up=True,
+                                                 table="composed"))
 
 
 def network_plan(cfg: MinkUNetConfig,
@@ -124,12 +125,16 @@ def layer_signatures(cfg: MinkUNetConfig) -> Dict[str, tuple]:
     return {lp.name: lp.sig for lp in declare(cfg).layers}
 
 
-def build_maps(st: SparseTensor, cache: Optional[MapCache] = None) -> dict:
+def build_maps(st: SparseTensor, cache: Optional[MapCache] = None,
+               tables: Optional[dict] = None) -> dict:
     """Build every kernel map once (maps are shared within groups) — the
     standard 4-level U-Net map program (``plan.pyramid_map_specs``), with
-    the table-adoption edges declared explicitly per ``KmapSpec``."""
+    the table-adoption edges declared explicitly per ``KmapSpec``.
+    ``tables``: pre-composed coordinate tables (scene-granular serving
+    reuse; see ``plan.build_maps_from_specs``) — the strided maps then skip
+    their unique argsorts and adopt the composed child tables instead."""
     return planlib.build_maps_from_specs(pyramid_map_specs(4, with_up=True),
-                                         st, cache)
+                                         st, cache, tables=tables)
 
 
 def apply(params, st: SparseTensor, cfg: MinkUNetConfig,

@@ -1,11 +1,12 @@
-"""Sparse serving engine: bucketed dynamic batching, cross-request map
-reuse, and persisted tuned plans (see engine.py for the architecture)."""
-from repro.serve.batcher import (PackedBatch, Scene, SceneBatcher,
-                                 SceneResult, scene_from_tensor)
+"""Sparse serving engine: bucketed dynamic batching, scene-granular and
+streaming map reuse, and persisted tuned plans (see engine.py for the
+architecture)."""
+from repro.serve.batcher import (PackedBatch, Scene, SceneBatcher, SceneDelta,
+                                 SceneResult, apply_delta, scene_from_tensor)
 from repro.serve.bucketing import BucketLadder
 from repro.serve.engine import ARCHS, Engine, EngineStats
 from repro.serve.plans import PlanRegistry
 
 __all__ = ["ARCHS", "BucketLadder", "Engine", "EngineStats", "PackedBatch",
-           "PlanRegistry", "Scene", "SceneBatcher", "SceneResult",
-           "scene_from_tensor"]
+           "PlanRegistry", "Scene", "SceneBatcher", "SceneDelta",
+           "SceneResult", "apply_delta", "scene_from_tensor"]

@@ -41,6 +41,55 @@ class Scene:
     def num_points(self) -> int:
         return self.coords.shape[0]
 
+    @property
+    def digest(self) -> str:
+        """Content hash of the voxel coordinates — the key of all mapping
+        reuse (kernel maps depend on coordinates only, never features)."""
+        d = self.__dict__.get("_digest")
+        if d is None:
+            d = hashlib.blake2b(np.ascontiguousarray(self.coords).tobytes(),
+                                digest_size=16).hexdigest()
+            object.__setattr__(self, "_digest", d)
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class SceneDelta:
+    """Frame-to-frame update of a streamed scene: evict ``removed`` voxels,
+    append ``added_*`` rows.  The streaming analogue of a full Scene — the
+    engine's incremental path turns it into a sorted-table delta-merge
+    instead of a fresh argsort."""
+
+    removed: np.ndarray       # (r, D) voxel coords present in the prev frame
+    added_coords: np.ndarray  # (a, D) voxel coords absent from the prev frame
+    added_feats: np.ndarray   # (a, C)
+
+    def __post_init__(self):
+        object.__setattr__(self, "removed", np.asarray(self.removed, np.int32))
+        object.__setattr__(self, "added_coords",
+                           np.asarray(self.added_coords, np.int32))
+        object.__setattr__(self, "added_feats", np.asarray(self.added_feats))
+        assert self.added_coords.shape[0] == self.added_feats.shape[0]
+
+
+def apply_delta(prev: Scene, delta: SceneDelta) -> Scene:
+    """The new frame's scene: ``prev`` rows minus ``removed`` (original
+    order preserved), then the added rows appended — exactly the row layout
+    ``hashing.CoordTable.delta_merge`` reproduces, so the delta-merged table
+    is bit-identical to a fresh build of this scene.  Streamed scenes must
+    hold unique voxel coords (voxelized clouds are)."""
+    index = {tuple(c): i for i, c in enumerate(prev.coords)}
+    drop = np.zeros((prev.num_points,), bool)
+    for c in delta.removed:
+        i = index.get(tuple(c))
+        if i is None or drop[i]:
+            raise ValueError(f"delta removes a coord not in the scene: {c}")
+        drop[i] = True
+    coords = np.concatenate([prev.coords[~drop], delta.added_coords])
+    feats = np.concatenate([prev.feats[~drop],
+                            delta.added_feats.astype(prev.feats.dtype, copy=False)])
+    return Scene(coords=coords, feats=feats)
+
 
 def scene_from_tensor(st: SparseTensor) -> Scene:
     """Extract the valid rows of a single-scene SparseTensor as a Scene."""

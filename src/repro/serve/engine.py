@@ -10,10 +10,23 @@ Ties the subsystem together (DESIGN: ISSUE 2 tentpole):
   sorted tables across the layer pyramid) and an **executor** (the model
   forward in inference-mode normalization).  Static bucket shapes bound jit
   recompiles to one per (bucket, stage) for the engine's lifetime;
-* built kernel maps are reused **across requests**: batches are keyed by a
-  content digest of their packed coordinates, and a small LRU maps digest →
-  device-resident map stack (Minuet's observation, lifted from layers to
-  requests — repeated frames/scenes skip mapping entirely);
+* built kernel maps are reused **across requests** at two granularities:
+  whole batches are keyed by a content digest of their packed coordinates
+  (a small LRU maps digest → device-resident map stack, so exact replays
+  skip mapping entirely), and — under the plan's ``"composed"`` /
+  ``"incremental"`` table strategies — *scenes* are keyed individually: a
+  per-scene store caches each scene's kernel-map stack and sorted table
+  ladder, and batch maps are **merge-composed** from the cached per-scene
+  stacks (host-side concatenation with index offsets; bit-identical to a
+  fresh build because batch bits keep scenes disjoint).  Under churning
+  batch composition — the common case in real traffic — only cold scenes
+  ever build maps, at their own size (Minuet §4 proper).  ``"incremental"``
+  additionally lets streaming frames (``submit_delta``) update their scene
+  table by an O(r+a) sorted delta-merge instead of a fresh argsort;
+* flushes are triggered explicitly, by queue depth (``flush_count``), or by
+  a latency deadline (``max_wait_ms`` — the oldest queued scene's age;
+  check via ``poll()`` or any ``submit``), with deadline-triggered flushes
+  counted in the engine stats;
 * the engine executes a compiled ``core.plan.NetworkPlan`` — the same
   artifact the models and the training stack run — loaded from a
   ``PlanRegistry`` at startup when one was persisted (tune once, serve
@@ -37,15 +50,20 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dataflows as df
+from repro.core import hashing
 from repro.core.autotuner import timeit_fn
-from repro.core.plan import NetworkPlan, PlanTuner
+from repro.core.kmap import SceneEntry, compose_kmaps
+from repro.core.plan import (KmapSpec, NetworkPlan, PlanTuner,
+                             scene_entry_arrays, scene_entry_from_arrays)
 from repro.core.sparse_conv import TrainDataflowConfig
-from repro.core.sparse_tensor import SparseTensor
+from repro.core.sparse_tensor import INVALID_COORD, SparseTensor
 from repro.models import centerpoint, minkunet
-from repro.serve.batcher import PackedBatch, Scene, SceneBatcher, SceneResult
+from repro.serve.batcher import (PackedBatch, Scene, SceneBatcher, SceneDelta,
+                                 SceneResult, apply_delta)
 from repro.serve.bucketing import BucketLadder
 from repro.serve.plans import PlanRegistry
 
@@ -116,6 +134,15 @@ class EngineStats:
     map_compiles: Dict[int, int] = dataclasses.field(default_factory=dict)
     map_hits: int = 0
     map_misses: int = 0
+    # scene-granular reuse (composed/incremental table strategies)
+    scene_compiles: Dict[int, int] = dataclasses.field(default_factory=dict)
+    scene_hits: int = 0          # batch slots served from the scene store
+    scene_misses: int = 0        # cold scenes that built their own stack
+    composed_batches: int = 0    # batch map stacks merge-composed, not built
+    delta_merges: int = 0        # streaming frames that delta-merged a table
+    # flush triggers beyond the explicit flush() call
+    deadline_flushes: int = 0    # max_wait_ms expiries
+    count_flushes: int = 0       # flush_count threshold crossings
 
     def summary(self) -> dict:
         lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
@@ -128,6 +155,13 @@ class EngineStats:
             "recompiles": dict(self.recompiles),
             "map_compiles": dict(self.map_compiles),
             "map_cache": {"hits": self.map_hits, "misses": self.map_misses},
+            "scene_tables": {"hits": self.scene_hits,
+                             "misses": self.scene_misses,
+                             "composed_batches": self.composed_batches,
+                             "delta_merges": self.delta_merges,
+                             "compiles": dict(self.scene_compiles)},
+            "deadline_flushes": self.deadline_flushes,
+            "count_flushes": self.count_flushes,
         }
 
 
@@ -137,6 +171,17 @@ class Engine:
     arch: "minkunet_kitti" | "centerpoint_waymo" (see ``ARCHS``).
     plans: a PlanRegistry (or path to one) holding tuned per-group dataflow
         assignments; missing entries fall back to the default config.
+    map_strategy: coordinate-table strategy override ("sort" / "composed" /
+        "incremental"); None follows the plan's declared ``KmapSpec.table``
+        axis.  "sort" is the PR-2 whole-batch-digest behavior; "composed"
+        adds scene-granular map reuse; "incremental" also enables
+        ``submit_delta`` streaming-table merges.
+    max_wait_ms / flush_count: latency-deadline and queue-depth triggers for
+        automatic flushes (None disables each); auto-flushed results are
+        returned by the next ``flush()``/``poll()``.
+    scene_cache_size: LRU bound of the per-scene store.  Entries are
+        host-resident numpy map stacks (~ refs x KD x scene-rung int32
+        words each), so size this by host RAM, not device memory.
     """
 
     def __init__(self, arch: str, ladder: BucketLadder = DEFAULT_LADDER,
@@ -144,7 +189,10 @@ class Engine:
                  model_config=None, params=None,
                  plans: Optional[PlanRegistry] = None,
                  maps_cache_size: int = 32, seed: int = 0,
-                 precision=None):
+                 precision=None, map_strategy: Optional[str] = None,
+                 scene_cache_size: int = 64,
+                 max_wait_ms: Optional[float] = None,
+                 flush_count: Optional[int] = None):
         if arch not in ARCHS:
             raise ValueError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
         self.binding = ARCHS[arch]
@@ -173,13 +221,34 @@ class Engine:
             nplan = nplan.with_precision(precision)
         self.nplan: NetworkPlan = nplan
         self.out_stride = self.binding.out_stride_of(self.cfg)
+        self.map_strategy = (map_strategy if map_strategy is not None
+                             else self.nplan.table_strategy)
+        assert self.map_strategy in KmapSpec.TABLE_STRATEGIES, self.map_strategy
+        self.max_wait_ms = max_wait_ms
+        self.flush_count = flush_count
         self.stats = EngineStats()
         self.maps_cache_size = maps_cache_size
+        self.scene_cache_size = scene_cache_size
         self._queue: List[tuple] = []       # (ticket, Scene, t_submit)
         self._next_ticket = 0
+        self._ready: Dict[int, SceneResult] = {}   # auto-flushed results
         self._map_store: "collections.OrderedDict[str, dict]" = collections.OrderedDict()
+        self._scene_store: "collections.OrderedDict[str, SceneEntry]" = collections.OrderedDict()
+        # stream id -> last scene, LRU-bounded: serve-forever processes see
+        # ephemeral stream ids, and each entry pins a full host-side Scene
+        self._streams: "collections.OrderedDict[str, Scene]" = collections.OrderedDict()
+        self.stream_cache_size = 1024
         self._builders: Dict[int, Callable] = {}
         self._executors: Dict[int, Callable] = {}
+        self._scene_builders: Dict[int, Callable] = {}
+        self._scene_delta_builders: Dict[int, Callable] = {}
+        # per-scene builds jit once per rung of a small capacity ladder
+        # (scene sizes vary request to request; exact-size eager builds
+        # would recompile every op per distinct size)
+        caps = [min(64, ladder.capacities[0])]
+        while caps[-1] < ladder.max_capacity:
+            caps.append(caps[-1] * 2)
+        self._scene_ladder = BucketLadder(tuple(caps), max_batch=1)
 
     # ------------------------------------------------------------------ jit
     def _builder_for(self, cap: int) -> Callable:
@@ -210,22 +279,112 @@ class Engine:
             self._executors[cap] = fn
         return fn
 
-    def _maps_for(self, batch: PackedBatch) -> dict:
+    # ------------------------------------------------------ scene-granular
+    def _scene_tensor(self, scene: Scene, cap: int) -> SparseTensor:
+        """Single-scene tensor (batch column 0) padded to a scene-ladder
+        capacity, with declared bounds matching the packed batches — so its
+        KeySpec, and therefore its sorted tables and maps, compose
+        bit-identically into batch ones.  Features are irrelevant to
+        mapping; a 1-channel zero column keeps the trace tiny."""
+        n = scene.num_points
+        coords = np.full((cap, 1 + scene.coords.shape[1]), int(INVALID_COORD),
+                         np.int32)
+        coords[:n, 0] = 0
+        coords[:n, 1:] = scene.coords
+        return SparseTensor(coords=jnp.asarray(coords),
+                            feats=jnp.zeros((cap, 1), jnp.float32),
+                            num_valid=jnp.asarray(n, jnp.int32), stride=1,
+                            batch_bound=self.ladder.max_batch,
+                            spatial_bound=self.batcher.spatial_bound)
+
+    def _scene_builder_for(self, cap: int) -> Callable:
+        fn = self._scene_builders.get(cap)
+        if fn is None:
+            specs = self.nplan.map_specs
+
+            def build(st):
+                self.stats.scene_compiles[cap] = \
+                    self.stats.scene_compiles.get(cap, 0) + 1
+                return scene_entry_arrays(specs, st)
+
+            fn = jax.jit(build)
+            self._scene_builders[cap] = fn
+        return fn
+
+    def _scene_delta_builder_for(self, cap: int) -> Callable:
+        """Like the scene builder, but adopting a delta-merged root table
+        (passed as arrays, padded to ``cap``) so the build skips the scene
+        argsort."""
+        fn = self._scene_delta_builders.get(cap)
+        if fn is None:
+            specs = self.nplan.map_specs
+
+            def build(st, keys, order):
+                self.stats.scene_compiles[cap] = \
+                    self.stats.scene_compiles.get(cap, 0) + 1
+                spec = hashing.key_spec_for(st.ndim_space, st.batch_bound,
+                                            st.spatial_bound)
+                maps, k, o = scene_entry_arrays(
+                    specs, st, root_table=hashing.CoordTable(spec, keys, order))
+                return maps, k, o
+
+            fn = jax.jit(build)
+            self._scene_delta_builders[cap] = fn
+        return fn
+
+    def _store_scene(self, digest: str, entry: SceneEntry) -> None:
+        self._scene_store[digest] = entry
+        while len(self._scene_store) > self.scene_cache_size:
+            self._scene_store.popitem(last=False)
+
+    def _scene_entry(self, scene: Scene) -> SceneEntry:
+        ent = self._scene_store.get(scene.digest)
+        if ent is not None:
+            self.stats.scene_hits += 1
+            self._scene_store.move_to_end(scene.digest)
+            return ent
+        self.stats.scene_misses += 1
+        cap = self._scene_ladder.select(scene.num_points)
+        maps, keys, order = self._scene_builder_for(cap)(
+            self._scene_tensor(scene, cap))
+        ent = scene_entry_from_arrays(self.nplan.map_specs, maps,
+                                      scene.num_points, keys, order)
+        self._store_scene(scene.digest, ent)
+        return ent
+
+    def _maps_for(self, batch: PackedBatch,
+                  scenes: Optional[Sequence[Scene]] = None) -> dict:
         maps = self._map_store.get(batch.digest)
         if maps is not None:
             self.stats.map_hits += 1
             self._map_store.move_to_end(batch.digest)
             return maps
         self.stats.map_misses += 1
-        maps = self._builder_for(batch.bucket)(batch.st)
+        maps = None
+        if scenes is not None and self.map_strategy in ("composed",
+                                                        "incremental"):
+            entries = [self._scene_entry(s) for s in scenes]
+            maps = compose_kmaps(entries, batch.bucket)
+            if maps is not None:
+                self.stats.composed_batches += 1
+        if maps is None:
+            maps = self._builder_for(batch.bucket)(batch.st)
         self._map_store[batch.digest] = maps
         while len(self._map_store) > self.maps_cache_size:
             self._map_store.popitem(last=False)
         return maps
 
     # ------------------------------------------------------------------ api
-    def submit(self, scene: Scene) -> int:
-        """Enqueue one scene; returns a ticket resolved by the next flush."""
+    def submit(self, scene: Scene, stream: Optional[str] = None) -> int:
+        """Enqueue one scene; returns a ticket resolved by the next flush.
+
+        stream: optional stream id — remembers the scene as the stream's
+        latest frame so later frames can arrive as ``submit_delta`` updates.
+        Submitting may trigger an automatic flush (queue depth reaching
+        ``flush_count``, or the oldest queued scene exceeding
+        ``max_wait_ms``); those results are held for the next ``flush()``
+        or ``poll()``.
+        """
         if scene.num_points > self.ladder.max_capacity:
             raise ValueError(f"scene of {scene.num_points} rows exceeds the "
                              f"largest bucket ({self.ladder.max_capacity})")
@@ -233,10 +392,102 @@ class Engine:
         self._next_ticket += 1
         self._queue.append((t, scene, time.perf_counter()))
         self.stats.submitted += 1
+        if stream is not None:
+            self._streams[stream] = scene
+            self._streams.move_to_end(stream)
+            while len(self._streams) > self.stream_cache_size:
+                self._streams.popitem(last=False)
+        self._autoflush()
         return t
 
+    def submit_delta(self, stream: str, delta: SceneDelta) -> int:
+        """Enqueue a streaming frame as a delta of the stream's last scene.
+
+        Under the ``"incremental"`` strategy the scene's cached sorted table
+        is **delta-merged** (O(r+a) merge, no argsort of the full cloud) and
+        the scene's map stack is rebuilt on the merged table, so the frame
+        composes into batches like any warm scene; other strategies just
+        apply the delta and submit the full scene.
+        """
+        prev = self._streams.get(stream)
+        if prev is None:
+            raise KeyError(f"unknown stream {stream!r}; seed it with "
+                           f"submit(scene, stream=...) first")
+        if (delta.added_coords.size and
+                int(np.abs(delta.added_coords).max()) > self.batcher.spatial_bound):
+            # the same declared-bound promise pack() enforces — reject here,
+            # BEFORE an out-of-range coord could mis-pack into a cached
+            # scene table (host-side np_pack_keys has no PAD sentinel)
+            raise ValueError(
+                f"delta adds a coord violating declared spatial_bound "
+                f"{self.batcher.spatial_bound}: max |coord| = "
+                f"{np.abs(delta.added_coords).max()}")
+        scene = apply_delta(prev, delta)
+        if (self.map_strategy == "incremental"
+                and scene.digest not in self._scene_store):
+            prev_ent = self._scene_store.get(prev.digest)
+            if prev_ent is not None:
+                spec = hashing.key_spec_for(scene.coords.shape[1],
+                                            self.ladder.max_batch,
+                                            self.batcher.spatial_bound)
+                # host-side O(r+a) sorted merge of the cached scene table
+                mkeys, morder = hashing.np_delta_merge(
+                    spec, prev_ent.root_keys, prev_ent.root_order,
+                    np.concatenate([np.zeros((delta.removed.shape[0], 1),
+                                             np.int32), delta.removed], 1),
+                    np.concatenate([np.zeros((delta.added_coords.shape[0], 1),
+                                             np.int32), delta.added_coords], 1))
+                # pad the merged table up to the scene rung — identical to a
+                # fresh build of the padded scene tensor (PAD keys sort
+                # last, pad rows in slot order), so the jitted builder
+                # adopts it transparently
+                n = scene.num_points
+                cap = self._scene_ladder.select(n)
+                pad = (cap - n,) + mkeys.shape[1:]
+                keys = np.concatenate([
+                    mkeys, np.full(pad, np.iinfo(np.int32).max, np.int32)])
+                order = np.concatenate([
+                    morder, np.arange(n, cap, dtype=np.int32)])
+                maps, k, o = self._scene_delta_builder_for(cap)(
+                    self._scene_tensor(scene, cap), jnp.asarray(keys),
+                    jnp.asarray(order))
+                ent = scene_entry_from_arrays(self.nplan.map_specs, maps,
+                                              n, k, o)
+                self._store_scene(scene.digest, ent)
+                self.stats.delta_merges += 1
+        return self.submit(scene, stream=stream)
+
+    def _deadline_due(self) -> bool:
+        return (self.max_wait_ms is not None and bool(self._queue) and
+                (time.perf_counter() - self._queue[0][2]) * 1e3
+                >= self.max_wait_ms)
+
+    def _autoflush(self) -> None:
+        if self.flush_count is not None and len(self._queue) >= self.flush_count:
+            self.stats.count_flushes += 1
+            self._ready.update(self._run_queue())
+        elif self._deadline_due():
+            self.stats.deadline_flushes += 1
+            self._ready.update(self._run_queue())
+
+    def poll(self) -> Dict[int, SceneResult]:
+        """Deadline hook for timer-driven callers: flush iff the oldest
+        queued scene has waited past ``max_wait_ms``, then drain any results
+        completed by automatic flushes."""
+        if self._deadline_due():
+            self.stats.deadline_flushes += 1
+            self._ready.update(self._run_queue())
+        out, self._ready = self._ready, {}
+        return out
+
     def flush(self) -> Dict[int, SceneResult]:
-        """Pack and run everything queued; returns {ticket: SceneResult}."""
+        """Pack and run everything queued; returns {ticket: SceneResult}
+        (including results completed earlier by automatic flushes)."""
+        out, self._ready = self._ready, {}
+        out.update(self._run_queue())
+        return out
+
+    def _run_queue(self) -> Dict[int, SceneResult]:
         if not self._queue:
             return {}
         queue, self._queue = self._queue, []
@@ -244,8 +495,9 @@ class Engine:
         results: Dict[int, SceneResult] = {}
         groups = self.batcher.plan([s.num_points for _, s, _ in queue])
         for group in groups:
-            batch = self.batcher.pack([queue[i][1] for i in group])
-            maps = self._maps_for(batch)
+            group_scenes = [queue[i][1] for i in group]
+            batch = self.batcher.pack(group_scenes)
+            maps = self._maps_for(batch, group_scenes)
             out_coords, out_feats, n_out = jax.block_until_ready(
                 self._executor_for(batch.bucket)(self.params, batch.st, maps))
             per_scene = self.batcher.unpack(batch, out_coords, out_feats,
@@ -275,8 +527,26 @@ class Engine:
 
     def warmup(self, channels: Optional[int] = None) -> None:
         """Compile every bucket once on synthetic single-scene batches so the
-        request stream never pays a trace."""
+        request stream never pays a trace.  Under the composed/incremental
+        strategies this also traces the per-scene builders for every rung of
+        the scene-capacity ladder (and the delta builders, for streaming)."""
         c = channels or self.binding.in_channels_of(self.cfg)
+        if self.map_strategy in ("composed", "incremental"):
+            for cap in self._scene_ladder.capacities:
+                rng = np.random.default_rng(cap)
+                coords = np.unique(rng.integers(
+                    -self.batcher.spatial_bound, self.batcher.spatial_bound,
+                    size=(2 * cap, 3), dtype=np.int32), axis=0)[:cap]
+                st = self._scene_tensor(
+                    Scene(coords=coords,
+                          feats=np.zeros((coords.shape[0], c), np.float32)),
+                    cap)
+                maps, keys, order = jax.block_until_ready(
+                    self._scene_builder_for(cap)(st))
+                if self.map_strategy == "incremental":
+                    # the fresh table doubles as a valid adopted-table input
+                    jax.block_until_ready(
+                        self._scene_delta_builder_for(cap)(st, keys, order))
         for cap in self.ladder.capacities:
             n = cap   # fill the bucket exactly so every rung compiles
             rng = np.random.default_rng(cap)
@@ -286,7 +556,7 @@ class Engine:
             scene = Scene(coords=coords, feats=rng.normal(size=(n, c)).astype(np.float32))
             batch = self.batcher.pack([scene])
             assert batch.bucket == cap, (batch.bucket, cap)
-            maps = self._maps_for(batch)
+            maps = self._maps_for(batch, [scene])
             jax.block_until_ready(
                 self._executor_for(batch.bucket)(self.params, batch.st, maps))
 
@@ -308,8 +578,9 @@ class Engine:
         sample_scenes = list(sample_scenes)
         # measure on the first bucket-fitting FIFO group of the sample
         group = self.batcher.plan([s.num_points for s in sample_scenes])[0]
-        batch = self.batcher.pack([sample_scenes[i] for i in group])
-        maps = self._maps_for(batch)
+        group_scenes = [sample_scenes[i] for i in group]
+        batch = self.batcher.pack(group_scenes)
+        maps = self._maps_for(batch, group_scenes)
 
         def measure(candidate: NetworkPlan) -> float:
             fn = jax.jit(lambda p, st, m: candidate.apply(p, st, m,

@@ -7,13 +7,13 @@ perception service sees frame to frame.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.data.synthetic import lidar_scene
-from repro.serve.batcher import Scene, scene_from_tensor
+from repro.serve.batcher import Scene, SceneDelta, apply_delta, scene_from_tensor
 
 
 def lidar_stream(seed: int, count: int, channels: int,
@@ -36,3 +36,66 @@ def lidar_stream(seed: int, count: int, channels: int,
                          extent=extent, voxel=voxel)
         scenes.append(scene_from_tensor(st))
     return scenes, bound
+
+
+def _scene_delta(rng, scene: Scene, churn_points: float, bound: int,
+                 channels: int) -> SceneDelta:
+    """A point-level frame update: evict ~churn_points of the voxels, insert
+    as many fresh ones (unique, in-bounds, absent from the kept set)."""
+    n = scene.num_points
+    r = max(1, int(round(churn_points * n)))
+    rm_idx = rng.choice(n, size=r, replace=False)
+    removed = scene.coords[rm_idx]
+    taken = set(map(tuple, scene.coords))
+    for c in removed:
+        taken.discard(tuple(c))
+    added: List[np.ndarray] = []
+    while len(added) < r:
+        cand = rng.integers(-bound, bound, size=(3,), dtype=np.int32)
+        if tuple(cand) not in taken:
+            taken.add(tuple(cand))
+            added.append(cand)
+    return SceneDelta(removed=removed, added_coords=np.asarray(added, np.int32),
+                      added_feats=rng.normal(size=(r, channels)).astype(np.float32))
+
+
+def churned_stream(seed: int, streams: int, frames: int, channels: int,
+                   n_range: Tuple[int, int] = (200, 600),
+                   churn_streams: float = 0.34, churn_points: float = 0.1,
+                   extent: float = 50.0, voxel: float = 0.4,
+                   ) -> Tuple[List[List[Tuple[str, Scene, Optional[SceneDelta]]]], int]:
+    """Streaming-scene traffic: ``streams`` concurrent sensors, each frame
+    re-submitting every stream's scene, with ~``churn_streams`` of the
+    streams receiving a point-level delta (``churn_points`` of their voxels
+    evicted and replaced) and the rest repeating unchanged.
+
+    This is the traffic shape where PR-2's whole-batch digest always misses
+    (every frame's packed batch differs) but scene-granular reuse keeps
+    hitting: unchanged streams compose straight from the scene store, and
+    changed streams carry an explicit ``SceneDelta`` for the incremental
+    path.  Returns ``(frames, bound)`` where ``frames[t]`` lists
+    ``(stream_id, scene, delta_or_None)`` per stream — ``delta`` is None on
+    frame 0 and on unchanged frames.  Deterministic in ``seed``.
+    """
+    base, bound = lidar_stream(seed, streams, channels, n_range=n_range,
+                               extent=extent, voxel=voxel)
+    rng = np.random.default_rng(seed + 1)
+    churned_per_frame = max(1, int(round(churn_streams * streams)))
+    ids = [f"s{i}" for i in range(streams)]
+    cur = list(base)
+    out: List[List[Tuple[str, Scene, Optional[SceneDelta]]]] = [
+        [(ids[i], cur[i], None) for i in range(streams)]]
+    for t in range(1, frames):
+        # rotate deterministically through the streams so churn is spread
+        churned = {(t * churned_per_frame + j) % streams
+                   for j in range(churned_per_frame)}
+        frame: List[Tuple[str, Scene, Optional[SceneDelta]]] = []
+        for i in range(streams):
+            if i in churned:
+                delta = _scene_delta(rng, cur[i], churn_points, bound, channels)
+                cur[i] = apply_delta(cur[i], delta)
+                frame.append((ids[i], cur[i], delta))
+            else:
+                frame.append((ids[i], cur[i], None))
+        out.append(frame)
+    return out, bound

@@ -12,7 +12,14 @@ Fault-tolerance posture:
   does the serialization on a background thread — the train loop continues;
 * ``restore`` takes an optional sharding tree and ``jax.device_put``s each
   leaf accordingly: restoring to a *different mesh shape* (elastic scaling
-  after losing a pod) is just a different sharding tree.
+  after losing a pod) is just a different sharding tree;
+* save/restore are **dtype-aware**: extension dtypes (bfloat16, fp8 — numpy
+  kind ``V``) are serialized through a same-width unsigned-int view (a bare
+  ``np.save`` silently degrades them to raw void bytes) and restored at
+  their *saved* dtype from the manifest, never silently cast to the target
+  tree's dtype — so the AdamW fp32 master-weight tree of a bf16
+  mixed-precision run round-trips bit-exactly even when the restore
+  template was rebuilt from freshly-cast params.
 """
 from __future__ import annotations
 
@@ -30,6 +37,35 @@ import numpy as np
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+#: same-width unsigned carrier for extension dtypes (numpy kind 'V'):
+#: np.save would silently write them as opaque void records otherwise.
+_UINT_OF_WIDTH = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a manifest dtype string, including ml_dtypes extension types
+    (registered by jax's import) like "bfloat16"."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode_leaf(leaf: np.ndarray) -> np.ndarray:
+    if leaf.dtype.kind == "V" and leaf.dtype.names is None:
+        return leaf.view(_UINT_OF_WIDTH[leaf.dtype.itemsize])
+    return leaf
+
+
+def _decode_leaf(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    want = _np_dtype(dtype_name)
+    if arr.dtype != want and arr.dtype.itemsize == want.itemsize and \
+            arr.dtype.kind in ("u", "V"):
+        return arr.view(want)
+    return arr
 
 
 def save(ckpt_dir: str | Path, step: int, tree: Any, *, extra: Optional[dict] = None):
@@ -73,7 +109,7 @@ def _write(ckpt_dir: Path, step: int, tree, leaves, extra):
         "extra": extra,
     }
     for i, leaf in enumerate(leaves):
-        np.save(tmp / f"arr_{i}.npy", leaf)
+        np.save(tmp / f"arr_{i}.npy", _encode_leaf(leaf))
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -93,6 +129,12 @@ def restore(ckpt_dir: str | Path, step: Optional[int], target_tree: Any,
             shardings: Any = None):
     """Restore into the structure of ``target_tree``.
 
+    Leaves come back at their **saved** dtype (from the manifest) — the
+    checkpoint is the source of truth: a template whose dtype disagrees
+    (e.g. a bf16 working copy standing in for the saved fp32 master tree)
+    must not silently crush the restored values.  Shapes are still
+    validated against the template.
+
     shardings: optional matching tree of jax.sharding.Sharding — pass the
     *new* mesh's shardings to reshard elastically."""
     if step is None:
@@ -106,11 +148,11 @@ def restore(ckpt_dir: str | Path, step: Optional[int], target_tree: Any,
                     else [None] * len(leaves))
     out = []
     for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
-        arr = np.load(d / f"arr_{i}.npy")
+        arr = _decode_leaf(np.load(d / f"arr_{i}.npy"), manifest["dtypes"][i])
         assert list(arr.shape) == list(ref.shape), f"leaf {i} shape mismatch"
         if shd is not None:
-            out.append(jax.device_put(arr.astype(ref.dtype), shd))
+            out.append(jax.device_put(arr, shd))
         else:
-            out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+            out.append(jax.numpy.asarray(arr))
     extra = manifest.get("extra", {})
     return jax.tree_util.tree_unflatten(treedef, out), step, extra

@@ -170,14 +170,17 @@ def test_batched_engine_bit_identical_to_per_scene(arch, channels):
 def test_engine_recompile_bound_and_map_reuse():
     """≤1 jit compile per bucket per stage after warmup, and replayed
     batches skip map construction via the content-keyed cross-request
-    cache."""
+    cache.  Under the default "composed" strategy batch maps are
+    merge-composed on the host, so the map-builder stage is never traced
+    at all; the "sort" strategy keeps the PR-2 one-trace-per-bucket bound."""
     eng = Engine("centerpoint_waymo",
                  ladder=BucketLadder((256, 512), max_batch=3), spatial_bound=64)
+    assert eng.map_strategy == "composed"    # the plan-declared default
     eng.warmup()
     warm_exec = dict(eng.stats.recompiles)
-    warm_maps = dict(eng.stats.map_compiles)
-    assert warm_exec == {256: 1, 512: 1}     # one trace per bucket
-    assert warm_maps == {256: 1, 512: 1}
+    assert warm_exec == {256: 1, 512: 1}     # one executor trace per bucket
+    assert eng.stats.map_compiles == {}      # composed: no builder traces
+    assert eng.stats.composed_batches == 2   # one composed batch per bucket
 
     scenes = [_mk_scene(n, 5, seed=100 + n) for n in (60, 150, 40, 220)]
     eng.serve(scenes, flush_every=2)
@@ -185,11 +188,19 @@ def test_engine_recompile_bound_and_map_reuse():
     eng.serve(scenes, flush_every=2)         # replay: identical batches
     # no new traces in steady state — the ≤1-per-bucket guarantee
     assert eng.stats.recompiles == warm_exec
-    assert eng.stats.map_compiles == warm_maps
-    # replayed epoch's batches all hit the map cache
+    assert eng.stats.map_compiles == {}
+    # replayed epoch's batches all hit the whole-batch map cache
     assert eng.stats.map_hits >= hits0 + 2
     s = eng.stats.summary()
     assert s["scenes"] == 8 and s["p95_ms"] >= s["p50_ms"] > 0
+
+    # the "sort" override restores the PR-2 jitted builder path exactly
+    eng2 = Engine("centerpoint_waymo",
+                  ladder=BucketLadder((256, 512), max_batch=3),
+                  spatial_bound=64, map_strategy="sort")
+    eng2.warmup()
+    assert eng2.stats.map_compiles == {256: 1, 512: 1}
+    assert eng2.stats.composed_batches == 0 and eng2.stats.scene_misses == 0
 
 
 def test_engine_rejects_oversize_scene():

@@ -86,6 +86,49 @@ def test_checkpoint_atomicity(tmp_path):
     assert ckpt.latest_step(tmp_path) == 1
 
 
+def test_checkpoint_dtype_roundtrip_master_weights(tmp_path):
+    """The AdamW fp32 master-weight tree of a bf16 run round-trips
+    bit-exactly: bf16 leaves survive np.save (which degrades extension
+    dtypes to raw void bytes without the uint carrier), and restore honors
+    the SAVED dtype from the manifest — a bf16 template standing in for the
+    fp32 master tree must not silently crush it."""
+    key = jax.random.PRNGKey(0)
+    params32 = {"w": jax.random.normal(key, (4, 3)),
+                "b": jax.random.normal(key, (3,))}
+    params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params32)
+    cfg = opt.AdamWConfig(master_weights=True)
+    state = opt.init_opt_state(params, cfg)
+    # give the master copy mantissa bits a bf16 cast would destroy
+    state["master"] = jax.tree.map(lambda m: m + 1.1920929e-4, params32)
+    tree = {"params": params, "opt": state}
+    ckpt.save(tmp_path, 5, tree)
+
+    # restore into a template rebuilt from scratch, with the master tree
+    # (wrongly) templated at the working bf16 dtype
+    template = {"params": jax.tree.map(jnp.zeros_like, params),
+                "opt": opt.init_opt_state(
+                    jax.tree.map(jnp.zeros_like, params), cfg)}
+    template["opt"]["master"] = jax.tree.map(
+        lambda m: m.astype(jnp.bfloat16), template["opt"]["master"])
+    restored, step, _ = ckpt.restore(tmp_path, None, template)
+    assert step == 5
+    for name in ("w", "b"):
+        r = restored["params"][name]
+        assert r.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(r).view(np.uint16),
+            np.asarray(params[name]).view(np.uint16))  # bit-exact bf16
+        rm = restored["opt"]["master"][name]
+        assert rm.dtype == jnp.float32            # saved dtype wins
+        np.testing.assert_array_equal(np.asarray(rm),
+                                      np.asarray(state["master"][name]))
+        # and the fp32 master really carries bits its bf16 cast loses
+        assert not np.array_equal(
+            np.asarray(rm), np.asarray(rm.astype(jnp.bfloat16)
+                                       .astype(jnp.float32)))
+    assert restored["opt"]["step"].dtype == jnp.int32
+
+
 def _toy_problem():
     target = jnp.asarray([1.0, -2.0])
 

@@ -10,7 +10,13 @@ drives the same synthetic stream through:
   (the "per-request forward" a naive deployment does);
 * ``repeat``    — the stream replayed through the warm engine: identical
   packed batches hit the cross-request map cache, so the second epoch skips
-  kernel-map construction entirely (hit rate in the derived column).
+  kernel-map construction entirely (hit rate in the derived column);
+* ``sharded``   — with ``--devices N`` (or several visible jax devices):
+  the replayed stream through a ``DeviceRouter`` sharding the same ladder
+  over N devices vs the single-device engine.  CPU CI uses host-platform
+  virtual devices (``XLA_FLAGS=--xla_force_host_platform_device_count=N``);
+  on one shared CPU the speedup is pipelining (one worker's host packing
+  overlapping another's compute), on real accelerators it is parallelism.
 
 Emits scenes/s and p50/p95 per-scene latency.  ``--tiny`` shrinks the
 stream and ladder for CI smoke coverage.
@@ -18,10 +24,15 @@ stream and ladder for CI smoke coverage.
 from __future__ import annotations
 
 import argparse
+import statistics
+import time
+
+import jax
 
 from benchmarks import common
 from repro.serve.bucketing import BucketLadder
 from repro.serve.engine import ARCHS, Engine, EngineStats
+from repro.serve.router import DeviceRouter
 from repro.serve.workload import lidar_stream
 
 
@@ -42,7 +53,52 @@ def _drive(arch: str, scenes, bound: int, ladder: BucketLadder,
     return s
 
 
-def run(tiny: bool = False):
+def _sharded_leg(arch: str, scenes, bound: int, ladder: BucketLadder,
+                 n_dev: int, reps: int):
+    """Replayed-stream throughput, DeviceRouter over ``n_dev`` devices vs
+    the single-device engine at the SAME serving config.
+
+    Both variants are co-resident and their replay epochs interleave
+    (engine, router, engine, router, …) with the ratio taken over medians —
+    the same drift-cancelling protocol bench_streaming uses; sequential
+    whole-variant timing on a shared CPU box swung ±2× run to run.  Each
+    epoch submits the full stream and flushes once, so every batch in the
+    queue is a routable unit.
+    """
+    eng = Engine(arch, ladder=ladder, spatial_bound=bound)
+    rt = DeviceRouter(arch, devices=n_dev, ladder=ladder, spatial_bound=bound)
+    eng.warmup()
+    rt.warmup()
+    eng.serve(scenes, flush_every=0)    # warm-in replay: scene builds,
+    rt.serve(scenes, flush_every=0)     # digest caches, routing state
+    eng.stats = EngineStats()           # steady state only below: reported
+    for w in rt.workers:                # recompiles/routed_batches cover the
+        w.stats = EngineStats()         # measured epochs, not warmup
+    rt.stats.busy_s, rt.stats.flushes = 0.0, 0
+    rt.stats.route_log.clear()
+    e_times, r_times = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        eng.serve(scenes, flush_every=0)
+        e_times.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        rt.serve(scenes, flush_every=0)
+        r_times.append(time.perf_counter() - t0)
+    n = len(scenes)
+    e_sps = n / statistics.median(e_times)
+    r_sps = n / statistics.median(r_times)
+    s = rt.stats.summary()
+    routed = ",".join(str(d["routed_batches"]) for d in s["devices"].values())
+    common.emit(
+        f"serving/{arch}/sharded_d{n_dev}/epoch",
+        statistics.median(r_times) * 1e6,
+        f"scenes_per_s={r_sps:.2f};single_scenes_per_s={e_sps:.2f};"
+        f"recompiles={sum(s['recompiles'].values())};routed_batches={routed}")
+    common.emit(f"serving/{arch}/sharded_vs_single", 0.0,
+                f"throughput_ratio={r_sps / e_sps:.2f}x;devices={n_dev}")
+
+
+def run(tiny: bool = False, devices: int = 0):
     if tiny:
         count, n_range, ladder = 6, (80, 400), BucketLadder((256, 512), max_batch=3)
         flush_every = 3
@@ -64,11 +120,28 @@ def run(tiny: bool = False):
 
         _drive(arch, scenes, bound, ladder, flush_every, "repeat", epochs=2)
 
+        n_dev = devices if devices else jax.device_count()
+        if n_dev > 1:
+            if jax.device_count() < n_dev:
+                raise RuntimeError(
+                    f"--devices {n_dev} needs XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={n_dev}")
+            # the sharded leg replays the stream in the warm-traffic regime
+            # the router targets (maps cached, executors hot), one scene
+            # per batch: the batch is the routing granularity, so this is
+            # the request-parallel deployment a device fleet serves
+            _sharded_leg(arch, scenes, bound, single, n_dev,
+                         reps=5 if tiny else 3)
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="reduced stream for CI smoke runs")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="run the sharded leg across N devices "
+                         "(0 = every visible device; sharded leg is skipped "
+                         "when only one is attached)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(tiny=args.tiny)
+    run(tiny=args.tiny, devices=args.devices)

@@ -12,11 +12,16 @@ from repro.core.sparse_conv import TrainDataflowConfig
 from repro.data.synthetic import lidar_scene
 
 ROWS: list[str] = []
+#: structured twin of ROWS — (name, us, derived) — for consumers like
+#: benchmarks/run.py's BENCH_CI.json: names may legally contain commas
+#: (e.g. "tab5/SK-M/splits={1,2}"), so re-parsing the CSV line is ambiguous
+RECORDS: list[tuple] = []
 
 
 def emit(name: str, us: float, derived: str = ""):
     row = f"{name},{us:.1f},{derived}"
     ROWS.append(row)
+    RECORDS.append((name, float(us), derived))
     print(row, flush=True)
 
 

@@ -5,10 +5,14 @@
         --tune --plans plans.json     # tune once…
     python -m repro.launch.serve_sparse --arch centerpoint_waymo \
         --plans plans.json            # …serve forever
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m repro.launch.serve_sparse --arch minkunet_kitti --devices 4
 
 Drives a mixed-size synthetic request stream through ``repro.serve.Engine``
+(or, with ``--devices N > 1``, the sharded ``repro.serve.DeviceRouter``)
 and prints latency/throughput stats (p50/p95 per scene, scenes/s, jit
-recompile and map-cache counters).
+recompile and map-cache counters; per-device routing counters when
+sharded).
 """
 from __future__ import annotations
 
@@ -17,14 +21,22 @@ import argparse
 from repro.serve.bucketing import BucketLadder
 from repro.serve.engine import ARCHS, Engine
 from repro.serve.plans import PlanRegistry
+from repro.serve.router import DeviceRouter
 from repro.serve.workload import lidar_stream
 
 
 def build_engine(arch: str, buckets, max_batch: int, spatial_bound: int,
                  plans_path=None, seed: int = 0,
-                 map_strategy=None) -> Engine:
+                 map_strategy=None, devices: int = 1):
+    """One serving front end: a plain ``Engine`` for a single device, a
+    ``DeviceRouter`` sharding the same ladder across ``devices`` workers
+    otherwise (identical submit/flush/serve API, bit-identical outputs)."""
     ladder = BucketLadder(tuple(buckets), max_batch=max_batch)
     plans = PlanRegistry.load(plans_path) if plans_path else None
+    if devices > 1:
+        return DeviceRouter(arch, devices=devices, ladder=ladder,
+                            spatial_bound=spatial_bound, plans=plans,
+                            seed=seed, map_strategy=map_strategy)
     return Engine(arch, ladder=ladder, spatial_bound=spatial_bound,
                   plans=plans, seed=seed, map_strategy=map_strategy)
 
@@ -43,11 +55,16 @@ def main(argv=None):
                          "cross-request map reuse on repeated batches")
     ap.add_argument("--flush-every", type=int, default=8,
                     help="scenes per flush (0 = one flush at the end)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard serving across the first N jax devices "
+                         "(CPU smoke: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--plans", default=None,
                     help="PlanRegistry JSON (loaded at startup; --tune writes it)")
     ap.add_argument("--tune", action="store_true",
                     help="run the Sparse Autotuner on a sample batch and "
-                         "persist the assignment before serving")
+                         "persist the assignment before serving (per-device "
+                         "plan entries when --devices > 1)")
     ap.add_argument("--map-strategy", default=None,
                     choices=["sort", "composed", "incremental"],
                     help="coordinate-table strategy override (default: the "
@@ -68,14 +85,19 @@ def main(argv=None):
                                  n_range=(args.min_points, args.max_points))
     engine = build_engine(args.arch, buckets, args.max_batch, bound,
                           plans_path=args.plans, seed=args.seed,
-                          map_strategy=args.map_strategy)
+                          map_strategy=args.map_strategy,
+                          devices=args.devices)
+    sharded = isinstance(engine, DeviceRouter)
 
     if args.tune:
         sample = scenes[:min(2, len(scenes))]
         assignment = engine.tune(sample)   # persists when --plans was given
-        print(f"tuned {len(assignment)} groups"
+        n_groups = (sum(len(a) for a in assignment.values()) if sharded
+                    else len(assignment))
+        print(f"tuned {n_groups} groups"
+              + (f" across {engine.num_devices} devices" if sharded else "")
               + (f" -> {args.plans}" if args.plans else " (not persisted)"))
-    elif engine.assignment:
+    elif not sharded and engine.assignment:
         print(f"loaded {len(engine.assignment)} tuned groups from {args.plans}")
 
     engine.warmup()
@@ -84,7 +106,8 @@ def main(argv=None):
         results = engine.serve(scenes, flush_every=args.flush_every)
 
     s = engine.stats.summary()
-    print(f"arch={args.arch} buckets={buckets} max_batch={args.max_batch}")
+    print(f"arch={args.arch} buckets={buckets} max_batch={args.max_batch}"
+          + (f" devices={engine.num_devices}" if sharded else ""))
     print(f"scenes: {s['scenes']} in {s['batches']} batches "
           f"({s['scenes_per_s']:.1f} scenes/s)")
     print(f"latency: p50 {s['p50_ms']:.1f} ms  p95 {s['p95_ms']:.1f} ms")
@@ -95,9 +118,15 @@ def main(argv=None):
     print(f"map cache: {s['map_cache']['hits']} hits / "
           f"{s['map_cache']['misses']} misses")
     sc = s["scene_tables"]
-    print(f"scene store [{engine.map_strategy}]: {sc['hits']} hits / "
+    print(f"scene store [{engine.map_strategy if not sharded else engine.workers[0].map_strategy}]: "
+          f"{sc['hits']} hits / "
           f"{sc['misses']} misses, {sc['composed_batches']} composed batches, "
           f"{sc['delta_merges']} delta merges")
+    if sharded:
+        for name, d in s["devices"].items():
+            print(f"  {name} [{d['device']}]: {d['routed_batches']} batches, "
+                  f"{d['scenes']} scenes, p50 {d['p50_ms']:.1f} ms "
+                  f"p95 {d['p95_ms']:.1f} ms, queue_depth {d['queue_depth']}")
     out = results[0]
     print(f"sample result: {out.feats.shape[0]} rows x {out.feats.shape[1]} ch "
           f"@ stride {out.stride}")

@@ -1,12 +1,14 @@
 """Sparse serving engine: bucketed dynamic batching, scene-granular and
-streaming map reuse, and persisted tuned plans (see engine.py for the
-architecture)."""
+streaming map reuse, persisted tuned plans, and the multi-device routed
+tier (see engine.py and router.py for the architecture)."""
 from repro.serve.batcher import (PackedBatch, Scene, SceneBatcher, SceneDelta,
                                  SceneResult, apply_delta, scene_from_tensor)
 from repro.serve.bucketing import BucketLadder
 from repro.serve.engine import ARCHS, Engine, EngineStats
-from repro.serve.plans import PlanRegistry
+from repro.serve.plans import PlanRegistry, device_key
+from repro.serve.router import DeviceRouter, RouterStats
 
-__all__ = ["ARCHS", "BucketLadder", "Engine", "EngineStats", "PackedBatch",
-           "PlanRegistry", "Scene", "SceneBatcher", "SceneDelta",
-           "SceneResult", "apply_delta", "scene_from_tensor"]
+__all__ = ["ARCHS", "BucketLadder", "DeviceRouter", "Engine", "EngineStats",
+           "PackedBatch", "PlanRegistry", "RouterStats", "Scene",
+           "SceneBatcher", "SceneDelta", "SceneResult", "apply_delta",
+           "device_key", "scene_from_tensor"]

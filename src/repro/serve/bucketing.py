@@ -51,6 +51,12 @@ class BucketLadder:
             f"{n_rows} rows exceed the largest bucket ({self.max_capacity}); "
             f"ladder={self.capacities}")
 
+    def group_capacity(self, sizes) -> int:
+        """Bucket capacity a FIFO group of scene sizes will be padded to —
+        the *padded* row count, which is what a batch actually costs a
+        device and therefore what the router's load score charges."""
+        return self.select(sum(sizes))
+
     @staticmethod
     def geometric(base: int, steps: int, growth: int = 2,
                   max_batch: int = 8) -> "BucketLadder":

@@ -46,8 +46,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,6 +127,7 @@ class EngineStats:
     submitted: int = 0
     completed: int = 0
     batches: int = 0
+    routed_batches: int = 0      # batches assigned by a DeviceRouter
     flushes: int = 0
     busy_s: float = 0.0
     latencies_ms: "collections.deque" = dataclasses.field(
@@ -149,6 +151,7 @@ class EngineStats:
         return {
             "scenes": self.completed,
             "batches": self.batches,
+            "routed_batches": self.routed_batches,
             "p50_ms": float(np.percentile(lat, 50)),
             "p95_ms": float(np.percentile(lat, 95)),
             "scenes_per_s": self.completed / self.busy_s if self.busy_s else 0.0,
@@ -182,6 +185,14 @@ class Engine:
     scene_cache_size: LRU bound of the per-scene store.  Entries are
         host-resident numpy map stacks (~ refs x KD x scene-rung int32
         words each), so size this by host RAM, not device memory.
+    device: pin this engine to one jax device — params and every packed
+        batch are ``jax.device_put`` there, so each compiled rung's
+        executor runs on that device.  None (default) follows jax's default
+        placement.  This is how the ``DeviceRouter`` builds one worker per
+        device.
+    plan_key: the PlanRegistry name to read/write plans under (defaults to
+        ``arch``; the router routes per-device entries like ``arch@dev2``
+        here — see ``serve.plans.device_key``).
     """
 
     def __init__(self, arch: str, ladder: BucketLadder = DEFAULT_LADDER,
@@ -192,26 +203,32 @@ class Engine:
                  precision=None, map_strategy: Optional[str] = None,
                  scene_cache_size: int = 64,
                  max_wait_ms: Optional[float] = None,
-                 flush_count: Optional[int] = None):
+                 flush_count: Optional[int] = None,
+                 device: Optional[jax.Device] = None,
+                 plan_key: Optional[str] = None):
         if arch not in ARCHS:
             raise ValueError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
         self.binding = ARCHS[arch]
         self.arch = arch
+        self.device = device
         self.cfg = model_config if model_config is not None else self.binding.default_config
         self.params = params if params is not None else self.binding.model.init_params(
             self.cfg, jax.random.PRNGKey(seed))
+        if device is not None:
+            self.params = jax.device_put(self.params, device)
         self.ladder = ladder
         self.batcher = SceneBatcher(ladder, spatial_bound)
         if isinstance(plans, str):
             plans = PlanRegistry.load(plans)
         self.plans = plans or PlanRegistry()
-        self.assignment = self.plans.get(arch)
+        self.plan_key = plan_key or arch
+        self.assignment = self.plans.get(self.plan_key)
         # The compiled artifact every stage shares: a persisted NetworkPlan
         # is used as-is when it still matches this engine's model config
         # (same layer names + ConvSpecs); otherwise — v1 files, or a plan
         # tuned under a different width/depth — one is recompiled from the
         # model declaration with the registry's assignment.
-        nplan = self.plans.network(arch)
+        nplan = self.plans.network(self.plan_key)
         compiled = self.binding.model.network_plan(self.cfg,
                                                    assignment=self.assignment)
         if nplan is None or [(lp.name, lp.spec) for lp in nplan.layers] != \
@@ -233,6 +250,11 @@ class Engine:
         self._next_ticket = 0
         self._ready: Dict[int, SceneResult] = {}   # auto-flushed results
         self._map_store: "collections.OrderedDict[str, dict]" = collections.OrderedDict()
+        # The scene store is device-agnostic (host numpy), so a DeviceRouter
+        # shares ONE store — and its lock — across all its workers; the lock
+        # only guards dict mutation, never a build (concurrent builds of the
+        # same digest are idempotent: entries are bit-identical).
+        self._scene_lock = threading.Lock()
         self._scene_store: "collections.OrderedDict[str, SceneEntry]" = collections.OrderedDict()
         # stream id -> last scene, LRU-bounded: serve-forever processes see
         # ephemeral stream ids, and each entry pins a full host-side Scene
@@ -291,11 +313,12 @@ class Engine:
                          np.int32)
         coords[:n, 0] = 0
         coords[:n, 1:] = scene.coords
-        return SparseTensor(coords=jnp.asarray(coords),
-                            feats=jnp.zeros((cap, 1), jnp.float32),
-                            num_valid=jnp.asarray(n, jnp.int32), stride=1,
-                            batch_bound=self.ladder.max_batch,
-                            spatial_bound=self.batcher.spatial_bound)
+        st = SparseTensor(coords=jnp.asarray(coords),
+                          feats=jnp.zeros((cap, 1), jnp.float32),
+                          num_valid=jnp.asarray(n, jnp.int32), stride=1,
+                          batch_bound=self.ladder.max_batch,
+                          spatial_bound=self.batcher.spatial_bound)
+        return st if self.device is None else jax.device_put(st, self.device)
 
     def _scene_builder_for(self, cap: int) -> Callable:
         fn = self._scene_builders.get(cap)
@@ -333,16 +356,18 @@ class Engine:
         return fn
 
     def _store_scene(self, digest: str, entry: SceneEntry) -> None:
-        self._scene_store[digest] = entry
-        while len(self._scene_store) > self.scene_cache_size:
-            self._scene_store.popitem(last=False)
+        with self._scene_lock:
+            self._scene_store[digest] = entry
+            while len(self._scene_store) > self.scene_cache_size:
+                self._scene_store.popitem(last=False)
 
     def _scene_entry(self, scene: Scene) -> SceneEntry:
-        ent = self._scene_store.get(scene.digest)
-        if ent is not None:
-            self.stats.scene_hits += 1
-            self._scene_store.move_to_end(scene.digest)
-            return ent
+        with self._scene_lock:
+            ent = self._scene_store.get(scene.digest)
+            if ent is not None:
+                self.stats.scene_hits += 1
+                self._scene_store.move_to_end(scene.digest)
+                return ent
         self.stats.scene_misses += 1
         cap = self._scene_ladder.select(scene.num_points)
         maps, keys, order = self._scene_builder_for(cap)(
@@ -409,6 +434,13 @@ class Engine:
         composes into batches like any warm scene; other strategies just
         apply the delta and submit the full scene.
         """
+        return self.submit(self._merge_delta(stream, delta), stream=stream)
+
+    def _merge_delta(self, stream: str, delta: SceneDelta) -> Scene:
+        """Apply ``delta`` to the stream's last scene and (incremental
+        strategy) delta-merge its cached table into a fresh SceneEntry.
+        Host-side work only — the router calls this on one worker and the
+        resulting store entry composes on every device."""
         prev = self._streams.get(stream)
         if prev is None:
             raise KeyError(f"unknown stream {stream!r}; seed it with "
@@ -425,7 +457,8 @@ class Engine:
         scene = apply_delta(prev, delta)
         if (self.map_strategy == "incremental"
                 and scene.digest not in self._scene_store):
-            prev_ent = self._scene_store.get(prev.digest)
+            with self._scene_lock:
+                prev_ent = self._scene_store.get(prev.digest)
             if prev_ent is not None:
                 spec = hashing.key_spec_for(scene.coords.shape[1],
                                             self.ladder.max_batch,
@@ -455,7 +488,7 @@ class Engine:
                                               n, k, o)
                 self._store_scene(scene.digest, ent)
                 self.stats.delta_merges += 1
-        return self.submit(scene, stream=stream)
+        return scene
 
     def _deadline_due(self) -> bool:
         return (self.max_wait_ms is not None and bool(self._queue) and
@@ -487,6 +520,29 @@ class Engine:
         out.update(self._run_queue())
         return out
 
+    def _dispatch_group(self, scenes: Sequence[Scene]) -> Tuple[PackedBatch, tuple]:
+        """Pack ``scenes``, resolve their maps, and dispatch the executor on
+        this engine's device *without* blocking — pair with
+        ``_finish_group``.  The dispatch/finish split is what lets the
+        ``DeviceRouter`` overlap one worker's host-side packing with another
+        worker's device execution."""
+        batch = self.batcher.pack(scenes)
+        if self.device is not None:
+            batch = dataclasses.replace(
+                batch, st=jax.device_put(batch.st, self.device))
+        maps = self._maps_for(batch, scenes)
+        out = self._executor_for(batch.bucket)(self.params, batch.st, maps)
+        return batch, out
+
+    def _finish_group(self, batch: PackedBatch, out) -> List[SceneResult]:
+        """Block on a dispatched batch and unpack it into per-scene rows."""
+        out_coords, out_feats, n_out = jax.block_until_ready(out)
+        per_scene = self.batcher.unpack(batch, out_coords, out_feats,
+                                        int(n_out), self.out_stride)
+        self.stats.batches += 1
+        self.stats.completed += batch.num_scenes
+        return per_scene
+
     def _run_queue(self) -> Dict[int, SceneResult]:
         if not self._queue:
             return {}
@@ -495,20 +551,13 @@ class Engine:
         results: Dict[int, SceneResult] = {}
         groups = self.batcher.plan([s.num_points for _, s, _ in queue])
         for group in groups:
-            group_scenes = [queue[i][1] for i in group]
-            batch = self.batcher.pack(group_scenes)
-            maps = self._maps_for(batch, group_scenes)
-            out_coords, out_feats, n_out = jax.block_until_ready(
-                self._executor_for(batch.bucket)(self.params, batch.st, maps))
-            per_scene = self.batcher.unpack(batch, out_coords, out_feats,
-                                            int(n_out), self.out_stride)
+            batch, out = self._dispatch_group([queue[i][1] for i in group])
+            per_scene = self._finish_group(batch, out)
             t_done = time.perf_counter()
             for slot, i in enumerate(group):
                 ticket, _, t_sub = queue[i]
                 results[ticket] = per_scene[slot]
                 self.stats.latencies_ms.append((t_done - t_sub) * 1e3)
-            self.stats.batches += 1
-            self.stats.completed += len(group)
         self.stats.busy_s += time.perf_counter() - t0
         self.stats.flushes += 1
         return results
@@ -554,11 +603,13 @@ class Engine:
                                   self.batcher.spatial_bound, size=(n, 3),
                                   dtype=np.int32)
             scene = Scene(coords=coords, feats=rng.normal(size=(n, c)).astype(np.float32))
-            batch = self.batcher.pack([scene])
+            # go through the REAL dispatch path: it commits the packed batch
+            # to this engine's device, and a warmup executed with any other
+            # input placement compiles a *different* executable — the first
+            # live batch would silently pay a second compile per rung
+            batch, out = self._dispatch_group([scene])
             assert batch.bucket == cap, (batch.bucket, cap)
-            maps = self._maps_for(batch, [scene])
-            jax.block_until_ready(
-                self._executor_for(batch.bucket)(self.params, batch.st, maps))
+            jax.block_until_ready(out)
 
     # ------------------------------------------------------------- autotune
     def tune(self, sample_scenes: Sequence[Scene],
@@ -591,7 +642,7 @@ class Engine:
         tuned = PlanTuner(self.nplan, space, measure).tune()
         self.nplan = tuned
         self.assignment = tuned.assignment()
-        self.plans.set(self.arch, self.assignment, network=tuned)
+        self.plans.set(self.plan_key, self.assignment, network=tuned)
         if save and self.plans.path:
             self.plans.save()
         self._executors.clear()   # recompile with the tuned plan

@@ -36,6 +36,17 @@ _VERSION = 2
 
 Assignment = Dict[tuple, TrainDataflowConfig]
 
+#: Per-device plan entries are ordinary v2 plan names (``arch@dev3``): a
+#: sharded serving tier can tune each device separately (heterogeneous
+#: fleets) and the file stays loadable by every schema-v2 reader.
+DEVICE_KEY_SEP = "@dev"
+
+
+def device_key(arch: str, device_index: int) -> str:
+    """The registry name of ``arch``'s plan for worker ``device_index``."""
+    assert device_index >= 0
+    return f"{arch}{DEVICE_KEY_SEP}{device_index}"
+
 
 def _sig_to_str(sig: tuple) -> str:
     stride, k, kind = sig
@@ -84,6 +95,19 @@ class PlanRegistry:
 
     def archs(self):
         return sorted(self._plans)
+
+    def resolve_key(self, arch: str, device_index: Optional[int] = None) -> str:
+        """The plan name an engine should read: the per-device entry when one
+        was persisted for ``device_index``, else the shared ``arch`` entry.
+
+        Per-device entries are written by ``DeviceRouter.tune`` under
+        ``device_key(arch, i)``; a registry without them routes every device
+        to the shared plan (homogeneous fleet — the common case)."""
+        if device_index is not None:
+            key = device_key(arch, device_index)
+            if key in self._plans or key in self._networks:
+                return key
+        return arch
 
     def to_dict(self) -> dict:
         return {"version": _VERSION,

@@ -1,0 +1,30 @@
+"""The consolidated perf artifact (benchmarks/run.py --out BENCH_CI.json):
+row parsing, median folding, and environment metadata — the pieces CI
+relies on to accumulate the perf trajectory."""
+import json
+
+from benchmarks import common
+from benchmarks.run import _metadata, _row_dict
+
+
+def test_emit_records_structured_rows():
+    start = len(common.RECORDS)
+    try:
+        # names/derived may legally contain commas ("splits={1,2}"), which
+        # is exactly why the artifact reads RECORDS, not the CSV lines
+        common.emit("tab5/SK-M/splits={1,2}", 68243.1, "x=1,y=2")
+        r = _row_dict(common.RECORDS[-1])
+    finally:
+        del common.RECORDS[start:], common.ROWS[start:]
+    assert r["name"] == "tab5/SK-M/splits={1,2}"
+    assert r["us_per_call"] == 68243.1
+    assert r["derived"] == "x=1,y=2"
+
+
+def test_metadata_is_json_serializable_and_complete():
+    meta = _metadata(tiny=True)
+    assert meta["tiny"] is True
+    for key in ("timestamp_utc", "git_sha", "jax", "backend",
+                "device_count", "python", "platform"):
+        assert key in meta, key
+    json.dumps(meta)   # artifact must serialize as-is

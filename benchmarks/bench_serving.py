@@ -30,10 +30,27 @@ import time
 import jax
 
 from benchmarks import common
+from repro import obs
 from repro.serve.bucketing import BucketLadder
 from repro.serve.engine import ARCHS, Engine, EngineStats
 from repro.serve.router import DeviceRouter
 from repro.serve.workload import lidar_stream
+
+
+def _ms(v) -> str:
+    """Derived-column formatting for maybe-None millisecond stats."""
+    return "none" if v is None else f"{v:.1f}"
+
+
+def _emit_phases(arch: str, tag: str, s: dict) -> None:
+    """One row per recorded phase (median µs) — the per-phase trend lines
+    check_regression.py gates on."""
+    for name, ph in s.get("phases", {}).items():
+        if ph["p50_ms"] is None:
+            continue
+        common.emit(f"serving/{arch}/{tag}/phase/{name}",
+                    ph["p50_ms"] * 1e3,
+                    f"count={ph['count']};p95_ms={_ms(ph['p95_ms'])}")
 
 
 def _drive(arch: str, scenes, bound: int, ladder: BucketLadder,
@@ -46,10 +63,48 @@ def _drive(arch: str, scenes, bound: int, ladder: BucketLadder,
     s = eng.stats.summary()
     mc = s["map_cache"]
     hit_rate = mc["hits"] / max(mc["hits"] + mc["misses"], 1)
-    derived = (f"scenes_per_s={s['scenes_per_s']:.2f};p95_ms={s['p95_ms']:.1f};"
+    derived = (f"scenes_per_s={s['scenes_per_s']:.2f};p95_ms={_ms(s['p95_ms'])};"
                f"recompiles={sum(s['recompiles'].values())};"
                f"map_hit_rate={hit_rate:.2f}")
-    common.emit(f"serving/{arch}/{tag}/p50", s["p50_ms"] * 1e3, derived)
+    common.emit(f"serving/{arch}/{tag}/p50", (s["p50_ms"] or 0.0) * 1e3,
+                derived)
+    if tag == "batched":
+        _emit_phases(arch, tag, s)
+    return s
+
+
+def _saturating_leg(arch: str, scenes, bound: int, ladder: BucketLadder,
+                    deadline_ms: float):
+    """Drive the engine past capacity: a deadline (``max_wait_ms``) far below
+    the per-batch service time, submissions arriving one at a time.  Every
+    submit can trip a deadline flush, and per-request latency is scored
+    against the deadline as an SLO — the row reports the miss rate and how
+    the engine degrades (scenes/s under overload vs the batched leg)."""
+    eng = Engine(arch, ladder=ladder, spatial_bound=bound,
+                 max_wait_ms=deadline_ms)
+    eng.warmup()
+    eng.serve(scenes, flush_every=0)            # warm maps/digests
+    eng.stats = EngineStats()
+    results = {}
+    for s in scenes:
+        eng.submit(s)
+        # an arrival gap longer than the deadline: the next poll/submit sees
+        # the oldest queued scene expired and fires a deadline flush (CPU
+        # service time >> deadline, so the flushed requests miss the SLO)
+        time.sleep(deadline_ms * 1.2 / 1e3)
+        results.update(eng.poll())
+    results.update(eng.flush())
+    assert len(results) == len(scenes)
+    s = eng.stats.summary()
+    slo = s["slo"]
+    common.emit(
+        f"serving/{arch}/saturated/p95",
+        (s["p95_ms"] or 0.0) * 1e3,
+        f"scenes_per_s={s['scenes_per_s']:.2f};"
+        f"slo_deadline_ms={_ms(slo['deadline_ms'])};"
+        f"slo_miss_rate={slo['miss_rate'] if slo['miss_rate'] is not None else 'none'};"
+        f"slo_misses={slo['misses']};slo_measured={slo['measured']};"
+        f"deadline_flushes={s['deadline_flushes']}")
     return s
 
 
@@ -120,6 +175,9 @@ def run(tiny: bool = False, devices: int = 0):
 
         _drive(arch, scenes, bound, ladder, flush_every, "repeat", epochs=2)
 
+        _saturating_leg(arch, scenes, bound, ladder,
+                        deadline_ms=2.0 if tiny else 5.0)
+
         n_dev = devices if devices else jax.device_count()
         if n_dev > 1:
             if jax.device_count() < n_dev:
@@ -142,6 +200,16 @@ if __name__ == "__main__":
                     help="run the sharded leg across N devices "
                          "(0 = every visible device; sharded leg is skipped "
                          "when only one is attached)")
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="trace the benchmark run: Chrome trace-event JSON "
+                         "(Perfetto) or .jsonl event log")
     args = ap.parse_args()
+    if args.trace:
+        obs.enable()
     print("name,us_per_call,derived")
     run(tiny=args.tiny, devices=args.devices)
+    if args.trace:
+        path = obs.export(obs.get_tracer(), args.trace)
+        snap = obs.get_tracer().snapshot()
+        print(f"# trace: {snap['spans']} spans + {snap['events']} events "
+              f"-> {path}")

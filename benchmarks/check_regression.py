@@ -1,0 +1,127 @@
+"""CI perf gate: compare a fresh ``BENCH_CI.json`` against the committed
+baseline and annotate regressions.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --current BENCH_CI.json
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --current BENCH_CI.json --refresh     # rewrite the baseline
+
+The baseline (``benchmarks/baselines/ci_baseline.json``) maps row name →
+median-µs as measured by ``benchmarks.run --tiny`` on a CI-class runner.
+Shared runners are noisy — a 2-core box swings 1.5-2× run to run — so the
+gate is deliberately generous:
+
+* rows faster than ``--min-us`` in the baseline are skipped outright
+  (µs-scale rows are pure scheduling noise at CI scale);
+* ratios past ``--warn-ratio`` (default 2×) emit GitHub ``::warning::``
+  annotations but do NOT fail the job;
+* only ratios past ``--fail-ratio`` (default 3×) — a real cliff, not
+  noise — emit ``::error::`` and exit non-zero;
+* rows present on one side only are reported informationally (new
+  benchmarks appear, old ones retire; neither is a regression).
+
+``--refresh`` regenerates the baseline from the current artifact (run it
+on a quiet machine after an intentional perf change and commit the file).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                                "ci_baseline.json")
+
+
+def rows_of(artifact: dict) -> dict:
+    """{row name: us_per_call} over every suite in a BENCH_CI artifact,
+    timed rows only (us > 0; ratio rows carry their payload in derived)."""
+    out = {}
+    for suite in artifact.get("suites", {}).values():
+        for row in suite.get("rows", []):
+            if row["us_per_call"] > 0:
+                out[row["name"]] = row["us_per_call"]
+    return out
+
+
+def compare(current: dict, baseline: dict, min_us: float,
+            warn_ratio: float, fail_ratio: float) -> dict:
+    """Classify shared rows: {'ok': [...], 'warn': [...], 'fail': [...],
+    'skipped': n, 'only_current': [...], 'only_baseline': [...]} where each
+    listed entry is (name, baseline_us, current_us, ratio)."""
+    out = {"ok": [], "warn": [], "fail": [], "skipped": 0,
+           "only_current": sorted(set(current) - set(baseline)),
+           "only_baseline": sorted(set(baseline) - set(current))}
+    for name in sorted(set(current) & set(baseline)):
+        base, cur = baseline[name], current[name]
+        if base < min_us:
+            out["skipped"] += 1
+            continue
+        ratio = cur / base
+        entry = (name, base, cur, ratio)
+        if ratio >= fail_ratio:
+            out["fail"].append(entry)
+        elif ratio >= warn_ratio:
+            out["warn"].append(entry)
+        else:
+            out["ok"].append(entry)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="BENCH_CI.json from this run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite the baseline from --current and exit")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="skip rows whose baseline is below this (noise)")
+    ap.add_argument("--warn-ratio", type=float, default=2.0)
+    ap.add_argument("--fail-ratio", type=float, default=3.0)
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        artifact = json.load(f)
+    current = rows_of(artifact)
+
+    if args.refresh:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump({"meta": artifact.get("meta", {}), "rows": current},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline refreshed: {len(current)} rows -> {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"::warning::no perf baseline at {args.baseline}; run "
+              f"check_regression --refresh and commit it")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)["rows"]
+
+    r = compare(current, baseline, args.min_us, args.warn_ratio,
+                args.fail_ratio)
+    print(f"perf gate: {len(r['ok'])} ok, {len(r['warn'])} warn, "
+          f"{len(r['fail'])} fail, {r['skipped']} skipped (<{args.min_us}µs), "
+          f"{len(r['only_current'])} new, {len(r['only_baseline'])} retired")
+    for name in r["only_current"]:
+        print(f"  new row (no baseline): {name}")
+    for name in r["only_baseline"]:
+        print(f"  baseline row missing from this run: {name}")
+    for name, base, cur, ratio in r["warn"]:
+        print(f"::warning::perf: {name} {base:.0f}µs -> {cur:.0f}µs "
+              f"({ratio:.2f}x baseline; warn threshold "
+              f"{args.warn_ratio:.1f}x — shared-runner noise is common, "
+              f"investigate if persistent)")
+    for name, base, cur, ratio in r["fail"]:
+        print(f"::error::perf regression: {name} {base:.0f}µs -> "
+              f"{cur:.0f}µs ({ratio:.2f}x baseline, threshold "
+              f"{args.fail_ratio:.1f}x)")
+    return 1 if r["fail"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

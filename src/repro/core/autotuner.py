@@ -20,6 +20,7 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
+from repro import obs
 from repro.core import dataflows as df
 from repro.core.sparse_conv import TrainDataflowConfig
 
@@ -78,7 +79,10 @@ class Autotuner:
             for cand in self.space:
                 trial = dict(best)
                 trial[g.name] = cand
-                lat = self.measure(trial)
+                with obs.span("tune_candidate", group=g.name,
+                              candidate=str(cand)) as sp:
+                    lat = self.measure(trial)
+                    sp.set(latency_ms=lat * 1e3)
                 results.append((lat, cand))
                 self.log.append((g.name, cand, lat))
             lat, cand = min(results, key=lambda r: r[0])

@@ -17,7 +17,9 @@ sharded).
 from __future__ import annotations
 
 import argparse
+import contextlib
 
+from repro import obs
 from repro.serve.bucketing import BucketLadder
 from repro.serve.engine import ARCHS, Engine
 from repro.serve.plans import PlanRegistry
@@ -27,7 +29,7 @@ from repro.serve.workload import lidar_stream
 
 def build_engine(arch: str, buckets, max_batch: int, spatial_bound: int,
                  plans_path=None, seed: int = 0,
-                 map_strategy=None, devices: int = 1):
+                 map_strategy=None, devices: int = 1, max_wait_ms=None):
     """One serving front end: a plain ``Engine`` for a single device, a
     ``DeviceRouter`` sharding the same ladder across ``devices`` workers
     otherwise (identical submit/flush/serve API, bit-identical outputs)."""
@@ -36,9 +38,16 @@ def build_engine(arch: str, buckets, max_batch: int, spatial_bound: int,
     if devices > 1:
         return DeviceRouter(arch, devices=devices, ladder=ladder,
                             spatial_bound=spatial_bound, plans=plans,
-                            seed=seed, map_strategy=map_strategy)
+                            seed=seed, map_strategy=map_strategy,
+                            max_wait_ms=max_wait_ms)
     return Engine(arch, ladder=ladder, spatial_bound=spatial_bound,
-                  plans=plans, seed=seed, map_strategy=map_strategy)
+                  plans=plans, seed=seed, map_strategy=map_strategy,
+                  max_wait_ms=max_wait_ms)
+
+
+def fmt_ms(v) -> str:
+    """Format a maybe-None millisecond value (idle stats report None)."""
+    return "-" if v is None else f"{v:.1f} ms"
 
 
 def main(argv=None):
@@ -72,6 +81,16 @@ def main(argv=None):
     ap.add_argument("--tiny", action="store_true",
                     help="reduced stream/ladder for smoke runs")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="write a trace of the serving run: Chrome "
+                         "trace-event JSON (open in Perfetto) or a flat "
+                         "event log when OUT ends in .jsonl; also captures "
+                         "an XLA-level profile to OUT.xprof/ when the jax "
+                         "profiler is available")
+    ap.add_argument("--max-wait-ms", type=float, default=None,
+                    help="latency deadline: flush when the oldest queued "
+                         "scene exceeds this age; doubles as the per-request "
+                         "SLO reported in summary()['slo']")
     args = ap.parse_args(argv)
 
     if args.tiny:
@@ -86,8 +105,10 @@ def main(argv=None):
     engine = build_engine(args.arch, buckets, args.max_batch, bound,
                           plans_path=args.plans, seed=args.seed,
                           map_strategy=args.map_strategy,
-                          devices=args.devices)
+                          devices=args.devices, max_wait_ms=args.max_wait_ms)
     sharded = isinstance(engine, DeviceRouter)
+    if args.trace:
+        obs.enable()
 
     if args.tune:
         sample = scenes[:min(2, len(scenes))]
@@ -102,15 +123,21 @@ def main(argv=None):
 
     engine.warmup()
     warm = engine.stats.summary()
-    for _ in range(max(1, args.epochs)):
-        results = engine.serve(scenes, flush_every=args.flush_every)
+    # --trace also brackets the serve epochs with the XLA-level profiler
+    # (TensorBoard/XProf artifact next to our own Chrome trace) when the
+    # running jax exposes one
+    profiler = (obs.jax_profile(args.trace + ".xprof")
+                if args.trace else contextlib.nullcontext(False))
+    with profiler as profiling:
+        for _ in range(max(1, args.epochs)):
+            results = engine.serve(scenes, flush_every=args.flush_every)
 
     s = engine.stats.summary()
     print(f"arch={args.arch} buckets={buckets} max_batch={args.max_batch}"
           + (f" devices={engine.num_devices}" if sharded else ""))
     print(f"scenes: {s['scenes']} in {s['batches']} batches "
           f"({s['scenes_per_s']:.1f} scenes/s)")
-    print(f"latency: p50 {s['p50_ms']:.1f} ms  p95 {s['p95_ms']:.1f} ms")
+    print(f"latency: p50 {fmt_ms(s['p50_ms'])}  p95 {fmt_ms(s['p95_ms'])}")
     print(f"jit: {sum(s['recompiles'].values())} executor + "
           f"{sum(s['map_compiles'].values())} map-builder compiles "
           f"across {len(buckets)} buckets "
@@ -125,11 +152,27 @@ def main(argv=None):
     if sharded:
         for name, d in s["devices"].items():
             print(f"  {name} [{d['device']}]: {d['routed_batches']} batches, "
-                  f"{d['scenes']} scenes, p50 {d['p50_ms']:.1f} ms "
-                  f"p95 {d['p95_ms']:.1f} ms, queue_depth {d['queue_depth']}")
+                  f"{d['scenes']} scenes, p50 {fmt_ms(d['p50_ms'])} "
+                  f"p95 {fmt_ms(d['p95_ms'])}, queue_depth {d['queue_depth']}")
+    if s["phases"]:
+        print("phases: " + "  ".join(
+            f"{name} p50 {fmt_ms(ph['p50_ms'])}"
+            for name, ph in s["phases"].items()))
+    if s["slo"]["measured"]:
+        slo = s["slo"]
+        print(f"slo: deadline {slo['deadline_ms']:.1f} ms, "
+              f"{slo['misses']}/{slo['measured']} misses "
+              f"({100 * slo['miss_rate']:.1f}%), "
+              f"{s['deadline_flushes']} deadline flushes")
     out = results[0]
     print(f"sample result: {out.feats.shape[0]} rows x {out.feats.shape[1]} ch "
           f"@ stride {out.stride}")
+    if args.trace:
+        path = obs.export(obs.get_tracer(), args.trace)
+        tr = obs.get_tracer().snapshot()
+        print(f"trace: {tr['spans']} spans + {tr['events']} events -> {path}"
+              + (f" (+ XLA profile in {args.trace}.xprof/)"
+                 if profiling else ""))
 
 
 if __name__ == "__main__":

@@ -19,12 +19,14 @@ if os.environ.get("REPRO_REAL_FLEET"):
     ]))
 
 import argparse
+import contextlib
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.configs import base as cfgbase
 from repro.data.synthetic import token_batches
 from repro.launch import mesh as meshlib
@@ -48,6 +50,11 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="trace the training loop: Chrome trace-event JSON "
+                         "(or .jsonl event log) with per-step/checkpoint "
+                         "spans, plus an XLA profile in OUT.xprof/ when the "
+                         "jax profiler is available")
     args = ap.parse_args()
 
     cfg = cfgbase.get_arch(args.arch)
@@ -88,10 +95,22 @@ def main():
 
     lcfg = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                       ckpt_dir=args.ckpt_dir, log_every=10)
-    params, state, report = train_loop(step, params, state, wrap(data), lcfg)
+    if args.trace:
+        obs.enable()
+    profiler = (obs.jax_profile(args.trace + ".xprof")
+                if args.trace else contextlib.nullcontext(False))
+    with profiler as profiling:
+        params, state, report = train_loop(step, params, state, wrap(data),
+                                           lcfg)
     print(f"done: {report.steps_run} steps, final metrics {report.last_metrics}, "
           f"stragglers={report.straggler_steps}, "
           f"mean_step={sum(report.step_times) / max(len(report.step_times), 1):.3f}s")
+    if args.trace:
+        path = obs.export(obs.get_tracer(), args.trace)
+        snap = obs.get_tracer().snapshot()
+        print(f"trace: {snap['spans']} spans -> {path}"
+              + (f" (+ XLA profile in {args.trace}.xprof/)"
+                 if profiling else ""))
 
 
 if __name__ == "__main__":

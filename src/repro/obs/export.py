@@ -1,0 +1,87 @@
+"""Trace exporters: Chrome trace-event JSON and flat JSONL.
+
+Two artifact formats for one ``Tracer``:
+
+* **Chrome trace-event JSON** (``chrome_trace`` / path without ``.jsonl``)
+  — loadable in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
+  Spans become complete (``"ph": "X"``) events, instant events become
+  ``"ph": "i"``, and thread-name metadata rows give one swimlane per
+  engine/worker thread, so nested queue/pack/map/execute/unpack phases
+  render as stacked slices per thread.
+* **JSONL** (``.jsonl`` path) — one JSON object per line (``type`` is
+  ``span`` / ``event``), closed by a ``snapshot`` line carrying the
+  counters/gauges; trivially greppable and streamable.
+
+Timestamps are monotonic-clock microseconds (Chrome) / nanoseconds
+(JSONL) — relative within the trace, not wall-clock.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from repro.obs.trace import Tracer
+
+
+def chrome_trace(tracer: Tracer) -> dict:
+    """The trace as a Chrome trace-event dict (``traceEvents`` schema)."""
+    pid = os.getpid()
+    events: List[dict] = [
+        {"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+         "args": {"name": "repro"}},
+    ]
+    named_tids = set()
+
+    def thread_meta(tid: int, thread: str) -> None:
+        if tid not in named_tids:
+            named_tids.add(tid)
+            events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                           "tid": tid, "args": {"name": thread}})
+
+    for rec in tracer.spans():
+        thread_meta(rec.tid, rec.thread)
+        events.append({
+            "name": rec.name, "cat": "phase", "ph": "X",
+            "ts": rec.t0_ns / 1e3, "dur": (rec.t1_ns - rec.t0_ns) / 1e3,
+            "pid": pid, "tid": rec.tid, "args": dict(rec.attrs)})
+    for rec in tracer.events():
+        thread_meta(rec.tid, rec.thread)
+        events.append({
+            "name": rec.name, "cat": "event", "ph": "i", "s": "t",
+            "ts": rec.t_ns / 1e3, "pid": pid, "tid": rec.tid,
+            "args": dict(rec.attrs)})
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": tracer.snapshot()}
+
+
+def export_chrome(tracer: Tracer, path: str) -> str:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(tracer), f)
+        f.write("\n")
+    return path
+
+
+def export_jsonl(tracer: Tracer, path: str) -> str:
+    with open(path, "w") as f:
+        for rec in tracer.spans():
+            f.write(json.dumps({
+                "type": "span", "name": rec.name, "t0_ns": rec.t0_ns,
+                "t1_ns": rec.t1_ns, "dur_ms": rec.dur_ms, "tid": rec.tid,
+                "thread": rec.thread, "depth": rec.depth,
+                "attrs": dict(rec.attrs)}) + "\n")
+        for rec in tracer.events():
+            f.write(json.dumps({
+                "type": "event", "name": rec.name, "t_ns": rec.t_ns,
+                "tid": rec.tid, "thread": rec.thread,
+                "attrs": dict(rec.attrs)}) + "\n")
+        f.write(json.dumps({"type": "snapshot", **tracer.snapshot()}) + "\n")
+    return path
+
+
+def export(tracer: Tracer, path: str) -> str:
+    """Write the artifact format the extension asks for: ``*.jsonl`` → the
+    flat event log, anything else → Chrome trace JSON."""
+    if path.endswith(".jsonl"):
+        return export_jsonl(tracer, path)
+    return export_chrome(tracer, path)

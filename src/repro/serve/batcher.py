@@ -20,6 +20,7 @@ from typing import List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.sparse_tensor import INVALID_COORD, SparseTensor
 from repro.serve.bucketing import BucketLadder
 
@@ -143,21 +144,23 @@ class SceneBatcher:
         adding the next scene would overflow the largest bucket or exceed
         ``max_batch`` scenes.  Returns lists of scene indices.
         """
-        groups: List[List[int]] = []
-        cur: List[int] = []
-        cur_rows = 0
-        for i, n in enumerate(sizes):
-            if n > self.ladder.max_capacity:
-                raise ValueError(f"scene {i} ({n} rows) exceeds largest bucket "
-                                 f"({self.ladder.max_capacity})")
-            if cur and (cur_rows + n > self.ladder.max_capacity
-                        or len(cur) >= self.ladder.max_batch):
+        with obs.span("batch_plan", scenes=len(sizes)) as sp:
+            groups: List[List[int]] = []
+            cur: List[int] = []
+            cur_rows = 0
+            for i, n in enumerate(sizes):
+                if n > self.ladder.max_capacity:
+                    raise ValueError(f"scene {i} ({n} rows) exceeds largest "
+                                     f"bucket ({self.ladder.max_capacity})")
+                if cur and (cur_rows + n > self.ladder.max_capacity
+                            or len(cur) >= self.ladder.max_batch):
+                    groups.append(cur)
+                    cur, cur_rows = [], 0
+                cur.append(i)
+                cur_rows += n
+            if cur:
                 groups.append(cur)
-                cur, cur_rows = [], 0
-            cur.append(i)
-            cur_rows += n
-        if cur:
-            groups.append(cur)
+            sp.set(groups=len(groups))
         return groups
 
     def pack(self, scenes: Sequence[Scene]) -> PackedBatch:
@@ -166,6 +169,11 @@ class SceneBatcher:
         sizes = tuple(s.num_points for s in scenes)
         total = sum(sizes)
         cap = self.ladder.select(total)
+        with obs.span("batch_pack", scenes=len(scenes), rows=total,
+                      bucket=cap):
+            return self._pack_body(scenes, sizes, total, cap)
+
+    def _pack_body(self, scenes, sizes, total, cap) -> PackedBatch:
         d = scenes[0].coords.shape[1]
         c = scenes[0].feats.shape[1]
 

@@ -45,6 +45,7 @@ scene's rows.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
 import time
@@ -54,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import dataflows as df
 from repro.core import hashing
 from repro.core.autotuner import timeit_fn
@@ -121,6 +123,29 @@ DEFAULT_SPATIAL_BOUND = 256
 #: tune-once-serve-forever process doesn't grow memory with uptime
 LATENCY_WINDOW = 8192
 
+#: per-phase duration samples kept per phase name (same rationale)
+PHASE_WINDOW = 4096
+
+
+def percentiles_ms(values) -> Tuple[Optional[float], Optional[float]]:
+    """(p50, p95) of a latency window — ``(None, None)`` when nothing was
+    recorded, so an idle worker is distinguishable from an infinitely fast
+    one (the old ``np.zeros(1)`` placeholder fabricated ``0.0`` ms)."""
+    if not len(values):
+        return (None, None)
+    lat = np.asarray(values, dtype=np.float64)
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 95)))
+
+
+def summarize_phases(windows: Dict[str, Sequence[float]]) -> Dict[str, dict]:
+    """Fold per-phase duration windows into {phase: count/p50/p95} — the
+    ``summary()['phases']`` block, shared by Engine and Router stats."""
+    out = {}
+    for name, window in sorted(windows.items()):
+        p50, p95 = percentiles_ms(window)
+        out[name] = {"count": len(window), "p50_ms": p50, "p95_ms": p95}
+    return out
+
 
 @dataclasses.dataclass
 class EngineStats:
@@ -145,15 +170,38 @@ class EngineStats:
     # flush triggers beyond the explicit flush() call
     deadline_flushes: int = 0    # max_wait_ms expiries
     count_flushes: int = 0       # flush_count threshold crossings
+    # per-phase duration windows (queue_wait/pack/map/execute/unpack/…) —
+    # always on (a perf_counter pair + deque append per phase), independent
+    # of whether the tracer is enabled
+    phases: Dict[str, "collections.deque"] = dataclasses.field(
+        default_factory=dict)
+    # SLO accounting: requests measured against the deadline (max_wait_ms)
+    slo_deadline_ms: Optional[float] = None
+    slo_measured: int = 0
+    slo_miss_count: int = 0
+
+    def observe(self, phase: str, ms: float) -> None:
+        window = self.phases.get(phase)
+        if window is None:
+            window = self.phases[phase] = collections.deque(
+                maxlen=PHASE_WINDOW)
+        window.append(ms)
+
+    def slo_observe(self, latency_ms: float, deadline_ms: float) -> None:
+        """Score one completed request against its latency deadline."""
+        self.slo_deadline_ms = deadline_ms
+        self.slo_measured += 1
+        if latency_ms > deadline_ms:
+            self.slo_miss_count += 1
 
     def summary(self) -> dict:
-        lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
+        p50, p95 = percentiles_ms(self.latencies_ms)
         return {
             "scenes": self.completed,
             "batches": self.batches,
             "routed_batches": self.routed_batches,
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p95_ms": float(np.percentile(lat, 95)),
+            "p50_ms": p50,
+            "p95_ms": p95,
             "scenes_per_s": self.completed / self.busy_s if self.busy_s else 0.0,
             "recompiles": dict(self.recompiles),
             "map_compiles": dict(self.map_compiles),
@@ -165,6 +213,12 @@ class EngineStats:
                              "compiles": dict(self.scene_compiles)},
             "deadline_flushes": self.deadline_flushes,
             "count_flushes": self.count_flushes,
+            "phases": summarize_phases(self.phases),
+            "slo": {"deadline_ms": self.slo_deadline_ms,
+                    "measured": self.slo_measured,
+                    "misses": self.slo_miss_count,
+                    "miss_rate": (self.slo_miss_count / self.slo_measured
+                                  if self.slo_measured else None)},
         }
 
 
@@ -264,6 +318,9 @@ class Engine:
         self._executors: Dict[int, Callable] = {}
         self._scene_builders: Dict[int, Callable] = {}
         self._scene_delta_builders: Dict[int, Callable] = {}
+        #: (kind, rung) marks queued by trace-time side effects, drained by
+        #: the jit wrappers into structured ``compile`` trace events
+        self._compile_marks: List[tuple] = []
         # per-scene builds jit once per rung of a small capacity ladder
         # (scene sizes vary request to request; exact-size eager builds
         # would recompile every op per distinct size)
@@ -272,18 +329,64 @@ class Engine:
             caps.append(caps[-1] * 2)
         self._scene_ladder = BucketLadder(tuple(caps), max_batch=1)
 
+    # -------------------------------------------------------- observability
+    @property
+    def device_name(self) -> str:
+        """The device identity compile events are keyed by (the pinned
+        device, or jax's default placement when the engine floats)."""
+        d = self.device if self.device is not None else jax.devices()[0]
+        return str(d)
+
+    @contextlib.contextmanager
+    def _phase(self, name: str, **attrs):
+        """Time one phase of the hot path into BOTH sinks: a tracer span
+        (rich, nestable, exportable — no-op singleton when disabled) and
+        the always-on ``EngineStats.phases`` histogram window."""
+        t0 = time.perf_counter()
+        with obs.span(name, **attrs) as sp:
+            yield sp
+        self.stats.observe(name, (time.perf_counter() - t0) * 1e3)
+
+    def _jit_counting(self, fn, kind: str, counter_attr: str,
+                      cap: int) -> Callable:
+        """jit ``fn`` with the trace-time side effect that counts *actual*
+        recompiles (not calls) into ``stats.<counter_attr>[cap]``, plus a
+        structured ``compile`` trace event carrying (kind, rung, device,
+        wall time).  The side effect fires mid-trace, where the compile's
+        duration is unknowable, so it queues a mark; the wrapper drains
+        marks after the triggering call returns and stamps the event with
+        that call's wall time (trace + compile + first execution)."""
+        def traced(*args):
+            counters = getattr(self.stats, counter_attr)
+            counters[cap] = counters.get(cap, 0) + 1
+            self._compile_marks.append((kind, cap))
+            return fn(*args)
+
+        jfn = jax.jit(traced)
+
+        def wrapper(*args):
+            n0 = len(self._compile_marks)
+            t0 = time.perf_counter()
+            out = jfn(*args)
+            if len(self._compile_marks) > n0:
+                wall_ms = (time.perf_counter() - t0) * 1e3
+                marks = self._compile_marks[n0:]
+                del self._compile_marks[n0:]
+                for k, c in marks:
+                    obs.event("compile", kind=k, rung=c,
+                              device=self.device_name,
+                              wall_ms=round(wall_ms, 3))
+            return out
+
+        return wrapper
+
     # ------------------------------------------------------------------ jit
     def _builder_for(self, cap: int) -> Callable:
         fn = self._builders.get(cap)
         if fn is None:
             nplan = self.nplan
-
-            def build(st):
-                # trace-time side effect: counts actual recompiles, not calls
-                self.stats.map_compiles[cap] = self.stats.map_compiles.get(cap, 0) + 1
-                return nplan.build_maps(st)
-
-            fn = jax.jit(build)
+            fn = self._jit_counting(nplan.build_maps, "map_builder",
+                                    "map_compiles", cap)
             self._builders[cap] = fn
         return fn
 
@@ -293,11 +396,10 @@ class Engine:
             binding, cfg, nplan = self.binding, self.cfg, self.nplan
 
             def run(params, st, maps):
-                self.stats.recompiles[cap] = self.stats.recompiles.get(cap, 0) + 1
                 feats = nplan.apply(params, st, maps, bn_mode="affine")
                 return binding.outputs_of(cfg, st, maps, feats)
 
-            fn = jax.jit(run)
+            fn = self._jit_counting(run, "executor", "recompiles", cap)
             self._executors[cap] = fn
         return fn
 
@@ -324,13 +426,8 @@ class Engine:
         fn = self._scene_builders.get(cap)
         if fn is None:
             specs = self.nplan.map_specs
-
-            def build(st):
-                self.stats.scene_compiles[cap] = \
-                    self.stats.scene_compiles.get(cap, 0) + 1
-                return scene_entry_arrays(specs, st)
-
-            fn = jax.jit(build)
+            fn = self._jit_counting(lambda st: scene_entry_arrays(specs, st),
+                                    "scene_builder", "scene_compiles", cap)
             self._scene_builders[cap] = fn
         return fn
 
@@ -343,15 +440,14 @@ class Engine:
             specs = self.nplan.map_specs
 
             def build(st, keys, order):
-                self.stats.scene_compiles[cap] = \
-                    self.stats.scene_compiles.get(cap, 0) + 1
                 spec = hashing.key_spec_for(st.ndim_space, st.batch_bound,
                                             st.spatial_bound)
                 maps, k, o = scene_entry_arrays(
                     specs, st, root_table=hashing.CoordTable(spec, keys, order))
                 return maps, k, o
 
-            fn = jax.jit(build)
+            fn = self._jit_counting(build, "scene_delta_builder",
+                                    "scene_compiles", cap)
             self._scene_delta_builders[cap] = fn
         return fn
 
@@ -370,10 +466,11 @@ class Engine:
                 return ent
         self.stats.scene_misses += 1
         cap = self._scene_ladder.select(scene.num_points)
-        maps, keys, order = self._scene_builder_for(cap)(
-            self._scene_tensor(scene, cap))
-        ent = scene_entry_from_arrays(self.nplan.map_specs, maps,
-                                      scene.num_points, keys, order)
+        with self._phase("scene_build", cap=cap, points=scene.num_points):
+            maps, keys, order = self._scene_builder_for(cap)(
+                self._scene_tensor(scene, cap))
+            ent = scene_entry_from_arrays(self.nplan.map_specs, maps,
+                                          scene.num_points, keys, order)
         self._store_scene(scene.digest, ent)
         return ent
 
@@ -388,12 +485,16 @@ class Engine:
         maps = None
         if scenes is not None and self.map_strategy in ("composed",
                                                         "incremental"):
-            entries = [self._scene_entry(s) for s in scenes]
-            maps = compose_kmaps(entries, batch.bucket)
+            # includes nested scene_build spans for any cold scenes
+            with self._phase("compose_kmaps", bucket=batch.bucket,
+                             scenes=len(scenes)):
+                entries = [self._scene_entry(s) for s in scenes]
+                maps = compose_kmaps(entries, batch.bucket)
             if maps is not None:
                 self.stats.composed_batches += 1
         if maps is None:
-            maps = self._builder_for(batch.bucket)(batch.st)
+            with self._phase("map_build", bucket=batch.bucket):
+                maps = self._builder_for(batch.bucket)(batch.st)
         self._map_store[batch.digest] = maps
         while len(self._map_store) > self.maps_cache_size:
             self._map_store.popitem(last=False)
@@ -460,34 +561,37 @@ class Engine:
             with self._scene_lock:
                 prev_ent = self._scene_store.get(prev.digest)
             if prev_ent is not None:
-                spec = hashing.key_spec_for(scene.coords.shape[1],
-                                            self.ladder.max_batch,
-                                            self.batcher.spatial_bound)
-                # host-side O(r+a) sorted merge of the cached scene table
-                mkeys, morder = hashing.np_delta_merge(
-                    spec, prev_ent.root_keys, prev_ent.root_order,
-                    np.concatenate([np.zeros((delta.removed.shape[0], 1),
-                                             np.int32), delta.removed], 1),
-                    np.concatenate([np.zeros((delta.added_coords.shape[0], 1),
-                                             np.int32), delta.added_coords], 1))
-                # pad the merged table up to the scene rung — identical to a
-                # fresh build of the padded scene tensor (PAD keys sort
-                # last, pad rows in slot order), so the jitted builder
-                # adopts it transparently
-                n = scene.num_points
-                cap = self._scene_ladder.select(n)
-                pad = (cap - n,) + mkeys.shape[1:]
-                keys = np.concatenate([
-                    mkeys, np.full(pad, np.iinfo(np.int32).max, np.int32)])
-                order = np.concatenate([
-                    morder, np.arange(n, cap, dtype=np.int32)])
-                maps, k, o = self._scene_delta_builder_for(cap)(
-                    self._scene_tensor(scene, cap), jnp.asarray(keys),
-                    jnp.asarray(order))
-                ent = scene_entry_from_arrays(self.nplan.map_specs, maps,
-                                              n, k, o)
-                self._store_scene(scene.digest, ent)
-                self.stats.delta_merges += 1
+                with self._phase("delta_merge", stream=stream,
+                                 added=int(delta.added_coords.shape[0]),
+                                 removed=int(delta.removed.shape[0])):
+                    spec = hashing.key_spec_for(scene.coords.shape[1],
+                                                self.ladder.max_batch,
+                                                self.batcher.spatial_bound)
+                    # host-side O(r+a) sorted merge of the cached scene table
+                    mkeys, morder = hashing.np_delta_merge(
+                        spec, prev_ent.root_keys, prev_ent.root_order,
+                        np.concatenate([np.zeros((delta.removed.shape[0], 1),
+                                                 np.int32), delta.removed], 1),
+                        np.concatenate([np.zeros((delta.added_coords.shape[0], 1),
+                                                 np.int32), delta.added_coords], 1))
+                    # pad the merged table up to the scene rung — identical to
+                    # a fresh build of the padded scene tensor (PAD keys sort
+                    # last, pad rows in slot order), so the jitted builder
+                    # adopts it transparently
+                    n = scene.num_points
+                    cap = self._scene_ladder.select(n)
+                    pad = (cap - n,) + mkeys.shape[1:]
+                    keys = np.concatenate([
+                        mkeys, np.full(pad, np.iinfo(np.int32).max, np.int32)])
+                    order = np.concatenate([
+                        morder, np.arange(n, cap, dtype=np.int32)])
+                    maps, k, o = self._scene_delta_builder_for(cap)(
+                        self._scene_tensor(scene, cap), jnp.asarray(keys),
+                        jnp.asarray(order))
+                    ent = scene_entry_from_arrays(self.nplan.map_specs, maps,
+                                                  n, k, o)
+                    self._store_scene(scene.digest, ent)
+                    self.stats.delta_merges += 1
         return scene
 
     def _deadline_due(self) -> bool:
@@ -526,19 +630,28 @@ class Engine:
         ``_finish_group``.  The dispatch/finish split is what lets the
         ``DeviceRouter`` overlap one worker's host-side packing with another
         worker's device execution."""
-        batch = self.batcher.pack(scenes)
-        if self.device is not None:
-            batch = dataclasses.replace(
-                batch, st=jax.device_put(batch.st, self.device))
-        maps = self._maps_for(batch, scenes)
-        out = self._executor_for(batch.bucket)(self.params, batch.st, maps)
+        with self._phase("pack", scenes=len(scenes)) as sp:
+            batch = self.batcher.pack(scenes)
+            sp.set(bucket=batch.bucket)
+            if self.device is not None:
+                batch = dataclasses.replace(
+                    batch, st=jax.device_put(batch.st, self.device))
+        with self._phase("map", bucket=batch.bucket):
+            maps = self._maps_for(batch, scenes)
+        with self._phase("dispatch", bucket=batch.bucket,
+                         device=self.device_name):
+            out = self._executor_for(batch.bucket)(self.params, batch.st, maps)
         return batch, out
 
     def _finish_group(self, batch: PackedBatch, out) -> List[SceneResult]:
         """Block on a dispatched batch and unpack it into per-scene rows."""
-        out_coords, out_feats, n_out = jax.block_until_ready(out)
-        per_scene = self.batcher.unpack(batch, out_coords, out_feats,
-                                        int(n_out), self.out_stride)
+        with self._phase("execute", bucket=batch.bucket,
+                         device=self.device_name):
+            out_coords, out_feats, n_out = jax.block_until_ready(out)
+        with self._phase("unpack", bucket=batch.bucket,
+                         scenes=batch.num_scenes):
+            per_scene = self.batcher.unpack(batch, out_coords, out_feats,
+                                            int(n_out), self.out_stride)
         self.stats.batches += 1
         self.stats.completed += batch.num_scenes
         return per_scene
@@ -548,16 +661,34 @@ class Engine:
             return {}
         queue, self._queue = self._queue, []
         t0 = time.perf_counter()
-        results: Dict[int, SceneResult] = {}
-        groups = self.batcher.plan([s.num_points for _, s, _ in queue])
-        for group in groups:
-            batch, out = self._dispatch_group([queue[i][1] for i in group])
-            per_scene = self._finish_group(batch, out)
-            t_done = time.perf_counter()
-            for slot, i in enumerate(group):
-                ticket, _, t_sub = queue[i]
-                results[ticket] = per_scene[slot]
-                self.stats.latencies_ms.append((t_done - t_sub) * 1e3)
+        with obs.span("flush", scenes=len(queue), device=self.device_name):
+            # queue wait = submit → flush start; submit stamped the same
+            # monotonic clock the tracer uses, so the interval replays
+            # exactly in the trace timeline
+            t0_ns = time.perf_counter_ns()
+            for ticket, _, t_sub in queue:
+                wait_ms = (t0 - t_sub) * 1e3
+                self.stats.observe("queue_wait", wait_ms)
+                obs.record_span("queue_wait", int(t_sub * 1e9), t0_ns,
+                                ticket=ticket)
+            results: Dict[int, SceneResult] = {}
+            groups = self.batcher.plan([s.num_points for _, s, _ in queue])
+            for group in groups:
+                batch, out = self._dispatch_group(
+                    [queue[i][1] for i in group])
+                per_scene = self._finish_group(batch, out)
+                t_done = time.perf_counter()
+                t_done_ns = time.perf_counter_ns()
+                for slot, i in enumerate(group):
+                    ticket, _, t_sub = queue[i]
+                    results[ticket] = per_scene[slot]
+                    lat_ms = (t_done - t_sub) * 1e3
+                    self.stats.latencies_ms.append(lat_ms)
+                    obs.record_span("request", int(t_sub * 1e9), t_done_ns,
+                                    ticket=ticket, bucket=batch.bucket)
+                    if self.max_wait_ms is not None:
+                        # max_wait_ms doubles as the per-request latency SLO
+                        self.stats.slo_observe(lat_ms, self.max_wait_ms)
         self.stats.busy_s += time.perf_counter() - t0
         self.stats.flushes += 1
         return results

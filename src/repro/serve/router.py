@@ -37,6 +37,7 @@ device_count=N`` — see ``launch.mesh.serving_devices``).
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures
 import os
 import time
@@ -45,11 +46,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro import obs
 from repro.launch.mesh import serving_devices
 from repro.serve.batcher import Scene, SceneBatcher, SceneDelta, SceneResult
 from repro.serve.bucketing import BucketLadder
 from repro.serve.engine import (DEFAULT_LADDER, DEFAULT_SPATIAL_BOUND, ARCHS,
-                                Engine, EngineStats)
+                                Engine, EngineStats, PHASE_WINDOW,
+                                percentiles_ms, summarize_phases)
 from repro.serve.plans import PlanRegistry, device_key
 
 
@@ -72,6 +75,24 @@ class RouterStats:
         #: (device_index, padded_rows) per routed batch, in routing order —
         #: the determinism contract is over this log
         self.route_log: List[Tuple[int, int]] = []
+        # router-level phase windows (queue_wait happens before routing, so
+        # it belongs to the tier, not to any worker) + SLO accounting
+        self.phases: Dict[str, collections.deque] = {}
+        self.slo_deadline_ms: Optional[float] = None
+        self.slo_measured = 0
+        self.slo_miss_count = 0
+
+    def observe(self, phase: str, ms: float) -> None:
+        win = self.phases.get(phase)
+        if win is None:
+            win = self.phases[phase] = collections.deque(maxlen=PHASE_WINDOW)
+        win.append(ms)
+
+    def slo_observe(self, latency_ms: float, deadline_ms: float) -> None:
+        self.slo_deadline_ms = deadline_ms
+        self.slo_measured += 1
+        if latency_ms > deadline_ms:
+            self.slo_miss_count += 1
 
     def _merge_counter(self, field: str) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -81,10 +102,11 @@ class RouterStats:
         return out
 
     @staticmethod
-    def _pctl(lat_deques) -> Tuple[float, float]:
+    def _pctl(lat_deques) -> Tuple[Optional[float], Optional[float]]:
         rows = [np.asarray(d) for d in lat_deques if len(d)]
-        lat = np.concatenate(rows) if rows else np.zeros(1)
-        return (float(np.percentile(lat, 50)), float(np.percentile(lat, 95)))
+        if not rows:
+            return (None, None)   # idle: report nothing, not a made-up 0.0
+        return percentiles_ms(np.concatenate(rows))
 
     def summary(self) -> dict:
         workers = self._router.workers
@@ -109,6 +131,15 @@ class RouterStats:
                 "p50_ms": dp50,
                 "p95_ms": dp95,
             }
+        # per-phase windows merged across the tier: router-level phases
+        # (queue_wait) + every worker's (pack/map/execute/unpack/…)
+        windows: Dict[str, list] = {}
+        for holder in [self] + stats:
+            for name, win in holder.phases.items():
+                windows.setdefault(name, []).extend(win)
+        slo_measured = self.slo_measured + sum(s.slo_measured for s in stats)
+        slo_misses = (self.slo_miss_count
+                      + sum(s.slo_miss_count for s in stats))
         return {
             "scenes": completed,
             "batches": sum(s.batches for s in stats),
@@ -123,6 +154,14 @@ class RouterStats:
             "scene_tables": scene_tables,
             "deadline_flushes": self.deadline_flushes,
             "count_flushes": self.count_flushes,
+            "phases": summarize_phases(windows),
+            "slo": {
+                "deadline_ms": self.slo_deadline_ms,
+                "measured": slo_measured,
+                "misses": slo_misses,
+                "miss_rate": (slo_misses / slo_measured
+                              if slo_measured else None),
+            },
             "devices": devices,
         }
 
@@ -197,7 +236,8 @@ class DeviceRouter:
         self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
         if self.parallel and len(self.workers) > 1:
             self._pool = concurrent.futures.ThreadPoolExecutor(
-                max_workers=min(len(self.workers), os.cpu_count() or 1))
+                max_workers=min(len(self.workers), os.cpu_count() or 1),
+                thread_name_prefix="router-worker")
 
     @property
     def num_devices(self) -> int:
@@ -213,6 +253,9 @@ class DeviceRouter:
         lo = min(loads)
         pick = min((i for i in range(n) if loads[i] == lo),
                    key=lambda i: (i - self._rr) % n)
+        obs.event("route", device=f"d{pick}",
+                  device_name=str(self.devices[pick]), rows=padded_rows,
+                  loads=list(loads))
         self._rr = (pick + 1) % n
         loads[pick] += padded_rows
         self.stats.route_log.append((pick, padded_rows))
@@ -276,6 +319,20 @@ class DeviceRouter:
             return {}
         queue, self._queue = self._queue, []
         t0 = time.perf_counter()
+        with obs.span("flush", scenes=len(queue),
+                      devices=len(self.workers)):
+            results = self._flush_queue(queue, t0)
+        self.stats.busy_s += time.perf_counter() - t0
+        self.stats.flushes += 1
+        return results
+
+    def _flush_queue(self, queue: List[tuple],
+                     t0: float) -> Dict[int, SceneResult]:
+        t0_ns = time.perf_counter_ns()
+        for ticket, _, t_sub in queue:
+            self.stats.observe("queue_wait", (t0 - t_sub) * 1e3)
+            obs.record_span("queue_wait", int(t_sub * 1e9), t0_ns,
+                            ticket=ticket)
         sizes = [s.num_points for _, s, _ in queue]
         # identical FIFO grouping to the single-device engine (bit-identity
         # contract), then each whole group is routed to one device
@@ -291,14 +348,17 @@ class DeviceRouter:
             items = shards[wi]
             n_done = 0
             try:
-                for group, rows in items:
-                    batch, out = w._dispatch_group(
-                        [queue[i][1] for i in group])
-                    per_scene = w._finish_group(batch, out)
-                    self.outstanding_rows[wi] -= rows
-                    n_done += 1
-                    w.stats.routed_batches += 1
-                    done.append((group, per_scene, time.perf_counter()))
+                with obs.span("shard", device=f"d{wi}",
+                              device_name=str(w.device),
+                              batches=len(items)):
+                    for group, rows in items:
+                        batch, out = w._dispatch_group(
+                            [queue[i][1] for i in group])
+                        per_scene = w._finish_group(batch, out)
+                        self.outstanding_rows[wi] -= rows
+                        n_done += 1
+                        w.stats.routed_batches += 1
+                        done.append((group, per_scene, time.perf_counter()))
             finally:
                 # a raising batch aborts the shard: un-charge it and every
                 # unprocessed group, or the leaked load score would bias
@@ -319,10 +379,14 @@ class DeviceRouter:
                 for slot, i in enumerate(group):
                     ticket, _, t_sub = queue[i]
                     results[ticket] = per_scene[slot]
-                    self.workers[wi].stats.latencies_ms.append(
-                        (t_done - t_sub) * 1e3)
-        self.stats.busy_s += time.perf_counter() - t0
-        self.stats.flushes += 1
+                    lat_ms = (t_done - t_sub) * 1e3
+                    self.workers[wi].stats.latencies_ms.append(lat_ms)
+                    obs.record_span("request", int(t_sub * 1e9),
+                                    int(t_done * 1e9), ticket=ticket,
+                                    device=f"d{wi}")
+                    if self.max_wait_ms is not None:
+                        # max_wait_ms doubles as the per-request latency SLO
+                        self.stats.slo_observe(lat_ms, self.max_wait_ms)
         return results
 
     def serve(self, scenes: Sequence[Scene],

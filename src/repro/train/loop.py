@@ -22,6 +22,7 @@ from typing import Callable, Iterator, Optional
 
 import jax
 
+from repro import obs
 from repro.train import checkpoint as ckpt
 
 
@@ -67,8 +68,9 @@ def train_loop(step_fn: Callable, params, opt_state, data_iter: Iterator,
         for step in range(start_step, cfg.total_steps):
             batch = next(data_iter)
             t0 = time.perf_counter()
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
-            jax.block_until_ready(metrics)
+            with obs.span("train_step", step=step):
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                jax.block_until_ready(metrics)
             dt = time.perf_counter() - t0
             report.step_times.append(dt)
             report.steps_run += 1
@@ -83,8 +85,10 @@ def train_loop(step_fn: Callable, params, opt_state, data_iter: Iterator,
                     report.straggler_steps += 1
 
             if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
-                ckpt.save_async(cfg.ckpt_dir, step + 1, state_of(params, opt_state),
-                                extra={"data_offset": step + 1})
+                with obs.span("checkpoint", step=step + 1):
+                    ckpt.save_async(cfg.ckpt_dir, step + 1,
+                                    state_of(params, opt_state),
+                                    extra={"data_offset": step + 1})
             if (step + 1) % cfg.log_every == 0:
                 m = report.last_metrics
                 print(f"step {step + 1}: {m}", flush=True)

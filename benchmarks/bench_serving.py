@@ -11,6 +11,19 @@ drives the same synthetic stream through:
 * ``repeat``    — the stream replayed through the warm engine: identical
   packed batches hit the cross-request map cache, so the second epoch skips
   kernel-map construction entirely (hit rate in the derived column);
+* ``pipelined``  — the same warm stream through a depth-2 double-buffered
+  engine vs the serial (depth-1) engine, interleaved epochs: host
+  scene-build/compose/pack of batch k+1 overlaps device execution of batch
+  k, reported with the overlap fraction from ``summary()['pipeline']``;
+* ``plan_compose`` — the executor-input composition in isolation: batch
+  ``_maps_for`` (kernel maps + ``SplitPlan``s for a pallas implicit-GEMM
+  assignment) under the composed strategy (host-side merge of cached
+  per-scene orders) vs the jitted fallback that argsorts per batch;
+* ``saturated``  — overload with a deadline: requests arrive faster than
+  they are served against a deadline ≈ 3× the warm batch service time.
+  Run twice — legacy age-based flushing, then deadline-aware admission
+  (``deadline_margin``), which flushes early enough that service completes
+  inside the budget; the two SLO miss rates are the contract;
 * ``sharded``   — with ``--devices N`` (or several visible jax devices):
   the replayed stream through a ``DeviceRouter`` sharding the same ladder
   over N devices vs the single-device engine.  CPU CI uses host-platform
@@ -73,39 +86,161 @@ def _drive(arch: str, scenes, bound: int, ladder: BucketLadder,
     return s
 
 
-def _saturating_leg(arch: str, scenes, bound: int, ladder: BucketLadder,
-                    deadline_ms: float):
-    """Drive the engine past capacity: a deadline (``max_wait_ms``) far below
-    the per-batch service time, submissions arriving one at a time.  Every
-    submit can trip a deadline flush, and per-request latency is scored
-    against the deadline as an SLO — the row reports the miss rate and how
-    the engine degrades (scenes/s under overload vs the batched leg)."""
-    eng = Engine(arch, ladder=ladder, spatial_bound=bound,
-                 max_wait_ms=deadline_ms)
-    eng.warmup()
-    eng.serve(scenes, flush_every=0)            # warm maps/digests
-    eng.stats = EngineStats()
+def _pipelined_leg(arch: str, scenes, bound: int, ladder: BucketLadder,
+                   reps: int):
+    """Warm replayed stream, depth-2 pipelined engine vs the serial
+    (depth-1) engine — interleaved alternating-order epochs, best-of
+    timing.  The two engines run the identical workload, so scheduler
+    noise is strictly additive and the min is the clean estimate of each
+    path's cost (medians at this epoch length still wobble a few percent
+    either way on a loaded core).  Each epoch submits the full stream and
+    flushes once, so every flush holds several groups for the in-flight
+    window to overlap."""
+    serial = Engine(arch, ladder=ladder, spatial_bound=bound, max_inflight=1)
+    pipe = Engine(arch, ladder=ladder, spatial_bound=bound, max_inflight=2)
+    for eng in (serial, pipe):
+        eng.warmup()
+        eng.serve(scenes, flush_every=0)        # warm maps/digests
+        eng.stats = EngineStats()
+    s_times, p_times = [], []
+    for rep in range(max(reps, 11)):
+        # alternate within-pair order so frequency/cache drift across the
+        # run cancels out of the pair
+        pair = ((serial, s_times), (pipe, p_times))
+        for eng, sink in (pair if rep % 2 == 0 else pair[::-1]):
+            t0 = time.perf_counter()
+            eng.serve(scenes, flush_every=0)
+            sink.append(time.perf_counter() - t0)
+    n = len(scenes)
+    s_sps = n / min(s_times)
+    p_sps = n / min(p_times)
+    ratio = p_sps / s_sps
+    s = pipe.stats.summary()
+    pl = s["pipeline"]
+    common.emit(
+        f"serving/{arch}/pipelined/epoch",
+        min(p_times) * 1e6,
+        f"scenes_per_s={p_sps:.2f};serial_scenes_per_s={s_sps:.2f};"
+        f"overlap_frac={pl['overlap_frac']:.2f};"
+        f"inflight_peak={pl['inflight_peak']};"
+        f"recompiles={sum(s['recompiles'].values())}")
+    common.emit(f"serving/{arch}/pipelined_vs_serial", 0.0,
+                f"throughput_ratio={ratio:.2f}x;"
+                f"overlap_s={pl['overlap_s']:.3f};"
+                f"device_busy_s={pl['device_busy_s']:.3f}")
+    _emit_phases(arch, "pipelined", s)
+    _emit_phases(arch, "serial", serial.stats.summary())
+
+
+def _plan_compose_leg(arch: str, scenes, bound: int, ladder: BucketLadder,
+                      reps: int):
+    """The executor-input composition in isolation: per-batch ``SplitPlan``
+    build for a pallas implicit-GEMM assignment, merge-composing the cached
+    per-scene stable orders on the host vs the jitted builder that re-runs
+    the bitmask argsorts on every batch.  Same composed batch maps for
+    both; plans are built, never executed, so the leg runs everywhere."""
+    from repro.core import dataflows as df
+    from repro.core.kmap import compose_kmaps, compose_split_plans
+    from repro.core.sparse_conv import TrainDataflowConfig
+    from repro.serve.plans import PlanRegistry
+
+    reg = PlanRegistry()
+    reg.set(arch, {(1, 3, "sub"): TrainDataflowConfig.bind_all(
+        df.DataflowConfig("implicit_gemm", n_splits=2, backend="pallas"))})
+    eng = Engine(arch, ladder=ladder, spatial_bound=bound, plans=reg,
+                 map_strategy="composed")
+    specs = eng.nplan.split_plan_specs()
+    assert specs, "pallas igemm assignment lost"
+    # first bucket-fitting FIFO group, exactly as a flush would form it
+    group_idx = eng.batcher.plan([s.num_points for s in scenes])[0]
+    group = [scenes[i] for i in group_idx]
+    batch = eng.batcher.pack(group)
+    entries = [eng._scene_entry(s) for s in group]
+    maps = compose_kmaps(entries, batch.bucket)
+    builder = eng._plan_builder_for(batch.bucket)
+
+    def composed():
+        return [compose_split_plans(entries, ref, ns, srt, batch.bucket)
+                for ref, ns, srt in specs]
+
+    def jitted():
+        return builder(maps)
+
+    jax.block_until_ready(jax.tree.leaves(composed()))  # warm: caches the
+    jax.block_until_ready(jax.tree.leaves(jitted()))    # runs / the trace
+    # interleaved best-of (timeit convention): both builders are a few
+    # hundred µs, where scheduler noise is strictly additive — the min is
+    # the clean measurement, and interleaving exposes both paths to the
+    # same machine state
+    t = {"composed": [], "jitted": []}
+    for _ in range(max(reps, 15)):
+        for tag, fn in (("composed", composed), ("jitted", jitted)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.tree.leaves(fn()))
+            t[tag].append(time.perf_counter() - t0)
+    times = {tag: min(v) for tag, v in t.items()}
+    common.emit(
+        f"serving/{arch}/plan_compose/batch", times["composed"] * 1e6,
+        f"jitted_us={times['jitted'] * 1e6:.1f};"
+        f"speedup={times['jitted'] / max(times['composed'], 1e-12):.2f}x;"
+        f"specs={len(specs)}")
+
+
+def _drive_deadline(eng: Engine, scenes, deadline_ms: float) -> dict:
+    """Poll-driven overload: arrivals every 0.25×deadline, so the queue
+    always holds work while a batch is in service and every flush is
+    deadline-triggered (no flush_count, no manual flush)."""
     results = {}
+    gap_s = 0.25 * deadline_ms / 1e3
     for s in scenes:
         eng.submit(s)
-        # an arrival gap longer than the deadline: the next poll/submit sees
-        # the oldest queued scene expired and fires a deadline flush (CPU
-        # service time >> deadline, so the flushed requests miss the SLO)
-        time.sleep(deadline_ms * 1.2 / 1e3)
+        t_end = time.perf_counter() + gap_s
+        while time.perf_counter() < t_end:
+            results.update(eng.poll())
+            time.sleep(0.02 * deadline_ms / 1e3)
+    while len(results) < len(scenes):
         results.update(eng.poll())
-    results.update(eng.flush())
-    assert len(results) == len(scenes)
-    s = eng.stats.summary()
-    slo = s["slo"]
-    common.emit(
-        f"serving/{arch}/saturated/p95",
-        (s["p95_ms"] or 0.0) * 1e3,
-        f"scenes_per_s={s['scenes_per_s']:.2f};"
-        f"slo_deadline_ms={_ms(slo['deadline_ms'])};"
-        f"slo_miss_rate={slo['miss_rate'] if slo['miss_rate'] is not None else 'none'};"
-        f"slo_misses={slo['misses']};slo_measured={slo['measured']};"
-        f"deadline_flushes={s['deadline_flushes']}")
-    return s
+        time.sleep(0.05 * deadline_ms / 1e3)
+    return results
+
+
+def _saturating_leg(arch: str, scenes, bound: int, ladder: BucketLadder):
+    """Overload against an *achievable* deadline (≈3× the warm batch
+    service time), twice: legacy age-based flushing first — the head
+    request starts service only once its whole budget is spent, so adding
+    service time blows the SLO — then deadline-aware admission
+    (``deadline_margin``), which subtracts predicted service from the
+    budget and cuts batches for about-to-expire heads.  The pair of miss
+    rates is the acceptance contract (aware < legacy)."""
+    stats = {}
+    for tag, margin in (("saturated", None), ("saturated_margin", 1.5)):
+        eng = Engine(arch, ladder=ladder, spatial_bound=bound,
+                     deadline_margin=margin)
+        eng.warmup()
+        eng.serve(scenes, flush_every=0)        # warm maps + phase windows
+        deadline_ms = 3.0 * eng._predicted_service_ms()
+        eng.max_wait_ms = deadline_ms           # SLO armed after warm-in
+        n0, m0 = eng.stats.slo_measured, eng.stats.slo_miss_count
+        results = _drive_deadline(eng, scenes, deadline_ms)
+        assert len(results) == len(scenes)
+        s = eng.stats.summary()
+        measured = eng.stats.slo_measured - n0
+        misses = eng.stats.slo_miss_count - m0
+        miss_rate = misses / max(measured, 1)
+        stats[tag] = miss_rate
+        common.emit(
+            f"serving/{arch}/{tag}/p95",
+            (s["p95_ms"] or 0.0) * 1e3,
+            f"scenes_per_s={s['scenes_per_s']:.2f};"
+            f"slo_deadline_ms={deadline_ms:.1f};"
+            f"slo_miss_rate={miss_rate:.2f};"
+            f"slo_misses={misses};slo_measured={measured};"
+            f"deadline_flushes={s['deadline_flushes']};"
+            f"deadline_cuts={s['deadline_cuts']}")
+    common.emit(f"serving/{arch}/saturated_margin_vs_legacy", 0.0,
+                f"legacy_miss_rate={stats['saturated']:.2f};"
+                f"aware_miss_rate={stats['saturated_margin']:.2f}")
+    return stats
 
 
 def _sharded_leg(arch: str, scenes, bound: int, ladder: BucketLadder,
@@ -175,8 +310,10 @@ def run(tiny: bool = False, devices: int = 0):
 
         _drive(arch, scenes, bound, ladder, flush_every, "repeat", epochs=2)
 
-        _saturating_leg(arch, scenes, bound, ladder,
-                        deadline_ms=2.0 if tiny else 5.0)
+        _pipelined_leg(arch, scenes, bound, ladder, reps=17 if tiny else 7)
+        _plan_compose_leg(arch, scenes, bound, ladder, reps=7 if tiny else 5)
+
+        _saturating_leg(arch, scenes, bound, ladder)
 
         n_dev = devices if devices else jax.device_count()
         if n_dev > 1:

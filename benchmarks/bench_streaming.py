@@ -95,7 +95,7 @@ def _drive(arch: str, frames, bound: int, ladder: BucketLadder) -> dict:
         for _ in range(5):
             eng._map_store.clear()
             t0 = time.perf_counter()
-            maps = eng._maps_for(batch, group)
+            maps, _ = eng._maps_for(batch, group)
             jax.block_until_ready(jax.tree.leaves(maps))
             m_times.append(time.perf_counter() - t0)
         s["mapping_ms"] = sorted(m_times)[len(m_times) // 2] * 1e3

@@ -81,6 +81,25 @@ class DataflowConfig:
 DEFAULT_CONFIG = DataflowConfig()
 
 
+def default_serving_space(include_pallas: Optional[bool] = None) -> Tuple[DataflowConfig, ...]:
+    """The serving tuner's default search space: all three dataflows on the
+    XLA backend plus — when the installed jax can run them (interpret mode
+    on CPU, native on TPU) — the same three on the Pallas backend.
+
+    include_pallas: force the Pallas axis on/off; None probes
+    ``kernels.common.pallas_supported()``.
+    """
+    if include_pallas is None:
+        from repro.kernels.common import pallas_supported
+        include_pallas = pallas_supported()
+    space = [DataflowConfig("gather_scatter"),
+             DataflowConfig("fetch_on_demand"),
+             DataflowConfig("implicit_gemm", n_splits=1)]
+    if include_pallas:
+        space += [dataclasses.replace(cfg, backend="pallas") for cfg in space]
+    return tuple(space)
+
+
 def plan_for(kmap: KernelMap, cfg: DataflowConfig) -> SplitPlan:
     return make_split_plan(kmap, cfg.effective_splits, sort=cfg.sorted)
 

@@ -96,6 +96,20 @@ def _bitmask(hit: jax.Array) -> jax.Array:
     return (pop << 24) | low
 
 
+def _np_bitmask(hit: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``_bitmask`` (identical exact/composite rules) for the
+    host-side split-plan composition path."""
+    kd = hit.shape[-1]
+    h = hit.astype(np.int32)
+    if kd <= 31:
+        w = np.int32(1) << np.arange(kd, dtype=np.int32)
+        return (h * w).sum(axis=-1).astype(np.int32)
+    pop = h.sum(axis=-1).astype(np.int32)
+    w24 = np.int32(1) << np.arange(24, dtype=np.int32)
+    low = (h[..., :24] * w24).sum(axis=-1).astype(np.int32)
+    return (pop << np.int32(24)) | low
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class KernelMap:
@@ -206,11 +220,11 @@ def _unique_coords(coords: jax.Array, valid: jax.Array, capacity: int):
     return out[:capacity], jnp.minimum(jnp.sum(is_first), capacity).astype(jnp.int32)
 
 
-def _grid_key_mask(spec: KeySpec, out_stride: int):
-    """Per-key-column AND masks (MSB-first) clearing the low
-    ``log2(out_stride)`` bits of every spatial field — turning a coordinate
-    key into its floor-grid key in one bit op.  For ``raw`` specs the
-    columns ARE the coordinates, and two's-complement masking floors
+def _grid_mask_ints(spec: KeySpec, out_stride: int):
+    """Per-key-column AND masks (MSB-first, plain python ints) clearing the
+    low ``log2(out_stride)`` bits of every spatial field — turning a
+    coordinate key into its floor-grid key in one bit op.  For ``raw`` specs
+    the columns ARE the coordinates, and two's-complement masking floors
     negatives correctly.  Returns None when the stride is not a power of two
     or a packed field is too narrow (callers fall back to the multi-word
     grid dedup)."""
@@ -220,7 +234,7 @@ def _grid_key_mask(spec: KeySpec, out_stride: int):
     if log2s == 0:
         return None
     if spec.raw:
-        return (jnp.int32(-1),) + (jnp.int32(~(out_stride - 1)),) * spec.ndim_space
+        return (-1,) + (~(out_stride - 1),) * spec.ndim_space
     masks = [np.int64(2 ** 31 - 1), np.int64(2 ** 31 - 1)]
     for f, (word, shift, width) in enumerate(spec.layout()):
         if f == 0:
@@ -228,9 +242,17 @@ def _grid_key_mask(spec: KeySpec, out_stride: int):
         if log2s > width - 1:
             return None  # bias 2^(width-1) must stay divisible by the stride
         masks[word] &= ~(((1 << log2s) - 1) << shift) & (2 ** 32 - 1)
-    cols = [jnp.int32(int(np.int32(m))) for m in masks]
+    cols = [int(np.int32(m)) for m in masks]
     # MSB-first column order: single word → (lo,), pair → (hi, lo)
     return (cols[0],) if spec.words == 1 else (cols[1], cols[0])
+
+
+def _grid_key_mask(spec: KeySpec, out_stride: int):
+    """jnp-scalar view of ``_grid_mask_ints`` for the traced unique pass."""
+    ints = _grid_mask_ints(spec, out_stride)
+    if ints is None:
+        return None
+    return tuple(jnp.int32(m) for m in ints)
 
 
 def _unique_from_keys(table: CoordTable, out_stride: int, capacity: int):
@@ -456,6 +478,11 @@ class SceneEntry:
                 composition needs (``in_stride``/``out_stride``/``kernel``).
     root_keys/root_order: the scene's sorted batch-0 CoordTable — the object
                 ``CoordTable.delta_merge`` updates on streaming frames.
+    splits:     lazily-filled (map ref, ranges) -> per-split (sorted bitmask
+                values, local stable order) numpy pairs — the per-scene half
+                of ``compose_split_plans``.
+    ladder:     streaming down-ladder state: down out-stride -> (folded cell
+                keys, root-row counts) — see ``cell_ladder``.
     """
 
     n: int
@@ -463,6 +490,26 @@ class SceneEntry:
     maps: Dict[tuple, dict]
     root_keys: np.ndarray
     root_order: np.ndarray
+    splits: Dict[tuple, list] = dataclasses.field(default_factory=dict)
+    ladder: Dict[int, tuple] = dataclasses.field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        """Host-memory footprint — the byte-aware scene-store LRU's unit.
+        Sums ``.nbytes`` of every numpy array the entry pins (maps, root
+        table, lazily-added split orders and ladder state); O(#arrays),
+        never touches array data."""
+        total = self.root_keys.nbytes + self.root_order.nbytes
+        for sm in self.maps.values():
+            for v in sm.values():
+                if isinstance(v, np.ndarray):
+                    total += v.nbytes
+        for runs in self.splits.values():
+            for vals, loc in runs:
+                total += vals.nbytes + loc.nbytes
+        for cells, counts in self.ladder.values():
+            total += cells.nbytes + counts.nbytes
+        return total
 
 
 def scene_table_ladder(coords: np.ndarray, spec: KeySpec,
@@ -599,6 +646,146 @@ def compose_kmaps(entries: Sequence[SceneEntry],
 
 
 # ---------------------------------------------------------------------------
+# Incremental down-ladder (cross-level delta maps): streaming deltas propagate
+# through the pyramid as exact per-cell occupancy counts, so a delta-merged
+# scene rebuilds its map stack from adopted tables at EVERY level — no
+# per-level masked-key argsort on the merged root.  All host-side numpy.
+# ---------------------------------------------------------------------------
+#
+# State per down level s: the sorted unique floor-grid cell keys (folded to
+# int64 scalars for two-word specs) plus, per cell, the number of root rows
+# inside it.  Counts make removal exact: a cell leaves the level exactly when
+# its last root row leaves the scene.  Note masking a sorted key array does
+# NOT keep it sorted (flooring two packed fields can swap neighbors), so the
+# initial derivation argsorts per level — but chained level-from-previous-
+# level (masks nest across pow2 strides), on strictly shrinking arrays, and
+# the per-frame delta path (``cell_ladder_delta``) only ever sorts the delta.
+
+
+def _fold_keys(keys: np.ndarray, words: int) -> np.ndarray:
+    """Order-isomorphic int64 scalar fold of packed key rows
+    (``hashing._np_cmp_keys``), always int64 so masks compose."""
+    return np.asarray(hashing._np_cmp_keys(np.asarray(keys), words),
+                      dtype=np.int64).reshape(-1)
+
+
+def _fold_grid_mask(spec: KeySpec, out_stride: int) -> Optional[int]:
+    """AND-mask on *folded* keys equivalent to per-word grid masking.  Valid
+    packed low words are non-negative (fields live in bits 0..29), so the
+    fold's ``lo - int32_min`` bias only sets bit 31 — kept in the mask."""
+    if spec.raw:
+        return None
+    ints = _grid_mask_ints(spec, out_stride)
+    if ints is None:
+        return None
+    if spec.words == 1:
+        return ints[0]
+    hi, lo = ints
+    return (hi << 32) | (1 << 31) | lo
+
+
+def _unique_counts(vals: np.ndarray, cnts: np.ndarray):
+    """(unique sorted vals, summed counts) of an unsorted (vals, cnts) pair."""
+    o = np.argsort(vals, kind="stable")
+    v, c = vals[o], cnts[o]
+    if not v.size:
+        return v, c
+    first = np.empty(v.shape, bool)
+    first[0] = True
+    np.not_equal(v[1:], v[:-1], out=first[1:])
+    starts = np.flatnonzero(first)
+    return v[starts], np.add.reduceat(c, starts)
+
+
+def cell_ladder(spec: KeySpec, root_keys: np.ndarray,
+                down_strides: Sequence[int]) -> Dict[int, tuple]:
+    """Initial down-ladder occupancy state of a scene.
+
+    root_keys: the scene's packed sorted keys, exact size (no PAD rows).
+    Returns {down out-stride: (folded cell keys — sorted unique int64,
+    int64 per-cell root-row counts)}.  Level s's cells are exactly
+    ``unique(mask_s(root))``; since pow2 grid masks nest, each level is
+    derived from the previous (smaller) level's cells with counts summed
+    through.  Stops at the first stride whose masking doesn't apply; raw
+    specs return {} (callers fall back to root-table-only adoption).
+    """
+    if spec.raw:
+        return {}
+    vals = _fold_keys(root_keys, spec.words)
+    cnts = np.ones(vals.shape, np.int64)
+    out: Dict[int, tuple] = {}
+    for s in sorted(down_strides):
+        fm = _fold_grid_mask(spec, s)
+        if fm is None:
+            break
+        vals, cnts = _unique_counts(vals & fm, cnts)
+        out[s] = (vals, cnts)
+    return out
+
+
+def cell_ladder_delta(spec: KeySpec, ladder: Dict[int, tuple],
+                      removed_keys: np.ndarray,
+                      added_keys: np.ndarray) -> Dict[int, tuple]:
+    """Propagate a root delta through the cell ladder: per level an O(r+a)
+    sort of the delta plus an O(cells) splice — never a sort of the full
+    cloud.  ``removed_keys``/``added_keys`` are packed root key rows (exact
+    sets: removed rows were present, added rows were absent).  Returns fresh
+    {out-stride: (cells, counts)}; the input ladder is not mutated.
+    """
+    w = spec.words
+    rem = _fold_keys(removed_keys, w)
+    add = _fold_keys(added_keys, w)
+    out: Dict[int, tuple] = {}
+    for s, (cells, cnts) in ladder.items():
+        fm = _fold_grid_mask(spec, s)
+        dv = np.concatenate([rem & fm, add & fm])
+        dc = np.concatenate([np.full(rem.shape, -1, np.int64),
+                             np.ones(add.shape, np.int64)])
+        dv, dc = _unique_counts(dv, dc)
+        live = dc != 0
+        dv, dc = dv[live], dc[live]
+        pos = np.searchsorted(cells, dv)
+        hit = np.zeros(dv.shape, bool)
+        in_r = pos < cells.size
+        hit[in_r] = cells[pos[in_r]] == dv[in_r]
+        new_cnts = cnts.copy()
+        new_cnts[pos[hit]] += dc[hit]
+        keep = new_cnts > 0
+        base_v, base_c = cells[keep], new_cnts[keep]
+        ins_v, ins_c = dv[~hit], dc[~hit]  # unseen cells can only gain rows
+        if ins_v.size:
+            ip = np.searchsorted(base_v, ins_v)
+            base_v = np.insert(base_v, ip, ins_v)
+            base_c = np.insert(base_c, ip, ins_c)
+        out[s] = (base_v, base_c)
+    return out
+
+
+def ladder_tables(spec: KeySpec, ladder: Dict[int, tuple],
+                  capacity: int) -> Dict[int, tuple]:
+    """Unfold ladder cells into the padded sorted-key arrays that
+    ``build_maps_from_specs(tables=...)`` adopts: {down out-stride: (keys
+    padded to ``capacity`` with PAD rows, None, n)} as numpy — every down
+    level of a delta-merged scene build then takes the table-adoption path
+    instead of re-argsorting masked keys."""
+    out: Dict[int, tuple] = {}
+    i32min = int(np.iinfo(np.int32).min)
+    for s, (cells, _) in ladder.items():
+        m = int(cells.shape[0])
+        if m > capacity:
+            return {}
+        if spec.words == 1:
+            keys = np.full((capacity,), _I32_MAX, np.int32)
+            keys[:m] = cells.astype(np.int32)
+        else:
+            keys = np.full((capacity, 2), _I32_MAX, np.int32)
+            keys[:m, 0] = (cells >> np.int64(32)).astype(np.int32)
+            keys[:m, 1] = ((cells & np.int64(0xFFFFFFFF)) + i32min).astype(np.int32)
+        out[s] = (keys, None, m)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Sorting + mask splits (Sparse Autotuner design-space, paper §4.1)
 # ---------------------------------------------------------------------------
 
@@ -676,6 +863,95 @@ def make_split_plan(kmap: KernelMap, n_splits: int, sort: bool = True,
 
     return SplitPlan(order=order, inv_order=inv, ranges=ranges, sorted_=sort,
                      occupancy=occ, tile_m=tile_m or 0)
+
+
+def _scene_split_keys(entry: SceneEntry, ref: tuple,
+                      ranges: Tuple[Tuple[int, int], ...]) -> list:
+    """Per-split (sorted bitmask values, local stable order) of one scene's
+    cached map — the per-scene half of a composed ``SplitPlan``.  Computed
+    once per (ref, ranges) with numpy stable argsorts and cached on the
+    entry; every subsequent batch containing the scene merge-composes the
+    cached runs instead of re-sorting."""
+    ck = (ref, ranges)
+    cached = entry.splits.get(ck)
+    if cached is not None:
+        return cached
+    sm = entry.maps[ref]
+    n_o = entry.sizes[sm["out_stride"]]
+    kd = sm["m_out"].shape[1]
+    runs = []
+    for a, b in ranges:
+        if kd <= 31:
+            bm = ((sm["bitmask"][:n_o].astype(np.int32) >> np.int32(a))
+                  & np.int32((1 << (b - a)) - 1))
+        else:
+            bm = _np_bitmask(sm["m_out"][:n_o, a:b] >= 0)
+        loc = np.argsort(bm, kind="stable").astype(np.int32)
+        runs.append((bm[loc], loc))
+    entry.splits[ck] = runs
+    return runs
+
+
+def _merge_sorted_runs(vals_a, ord_a, vals_b, ord_b):
+    """Stable two-way merge of two sorted runs whose A row indices all
+    precede B's — ties land A-first (the ``np_delta_merge`` searchsorted
+    pattern), matching a stable sort of the concatenation."""
+    pos_a = np.arange(vals_a.size) + np.searchsorted(vals_b, vals_a, side="left")
+    pos_b = np.arange(vals_b.size) + np.searchsorted(vals_a, vals_b, side="right")
+    vals = np.empty(vals_a.size + vals_b.size, vals_a.dtype)
+    order = np.empty(vals.size, np.int32)
+    vals[pos_a] = vals_a
+    vals[pos_b] = vals_b
+    order[pos_a] = ord_a
+    order[pos_b] = ord_b
+    return vals, order
+
+
+def compose_split_plans(entries: Sequence[SceneEntry], ref: tuple,
+                        n_splits: int, sort: bool, capacity: int) -> SplitPlan:
+    """Merge-compose per-scene sorted split orders into the batch
+    ``SplitPlan`` — host-side numpy, no device argsort on the batch path.
+
+    Bit-identical to ``make_split_plan(compose_kmaps(entries, capacity)[ref],
+    n_splits, sort)``: jnp's argsort is stable, so sorting the concatenated
+    per-scene bitmask blocks (pad tail at int32 max) IS the stable k-way
+    merge of the per-scene stable-sorted runs — ties break toward the lower
+    global row, i.e. the earlier scene — followed by the pad rows in slot
+    order.  Callers must pass the same entries/capacity that composed the
+    kernel maps.
+    """
+    m0 = entries[0].maps[ref]
+    kd = m0["m_out"].shape[1]
+    ranges = split_ranges(kd, n_splits)
+    cap = capacity
+    if not sort:
+        eye = np.ascontiguousarray(np.broadcast_to(
+            np.arange(cap, dtype=np.int32), (len(ranges), cap)))
+        order = jnp.asarray(eye)
+        return SplitPlan(order=order, inv_order=order, ranges=ranges,
+                         sorted_=False)
+    out_s = m0["out_stride"]
+    offs = np.cumsum([0] + [e.sizes[out_s] for e in entries])
+    total = int(offs[-1])
+    per_scene = [_scene_split_keys(e, ref, ranges) for e in entries]
+    order = np.empty((len(ranges), cap), np.int32)
+    for s in range(len(ranges)):
+        vals, merged = per_scene[0][s]
+        for b in range(1, len(entries)):
+            sv, so = per_scene[b][s]
+            vals, merged = _merge_sorted_runs(vals, merged,
+                                              sv, so + np.int32(offs[b]))
+        order[s, :total] = merged
+        order[s, total:] = np.arange(total, cap, dtype=np.int32)
+    inv = np.empty_like(order)
+    rows = np.arange(cap, dtype=np.int32)
+    for s in range(len(ranges)):
+        inv[s, order[s]] = rows
+    # one batched transfer: two separate jnp.asarray dispatches would double
+    # the per-batch host->device overhead that dominates at small capacities
+    order_d, inv_d = jax.device_put((order, inv))
+    return SplitPlan(order=order_d, inv_order=inv_d,
+                     ranges=ranges, sorted_=True)
 
 
 def _split_occupancy(hit: jax.Array, order: jax.Array, rng: Tuple[int, int],

@@ -52,7 +52,8 @@ from repro.core import precision as prec
 from repro.core.autotuner import (Autotuner, TrainingAutotuner,
                                   partition_groups)
 from repro.core.hashing import CoordTable
-from repro.core.kmap import MapCache, SceneEntry, build_kmap, transpose_kmap
+from repro.core.kmap import (MapCache, SceneEntry, build_kmap,
+                             make_split_plan, transpose_kmap)
 from repro.core.precision import FP32, PrecisionPolicy
 from repro.core.sparse_conv import (ConvSpec, TrainDataflowConfig, apply_conv)
 from repro.core.sparse_tensor import SparseTensor
@@ -304,7 +305,8 @@ def build_maps_from_specs(specs: Sequence[KmapSpec], st: SparseTensor,
 
 
 def scene_entry_arrays(map_specs: Sequence[KmapSpec], st: SparseTensor,
-                       root_table: Optional[CoordTable] = None):
+                       root_table: Optional[CoordTable] = None,
+                       tables: Optional[dict] = None):
     """The traceable core of a per-scene mapping build: the kernel-map
     stack plus the scene's sorted root table arrays.  ``st`` is a
     single-scene tensor (batch column 0, padding allowed — the serving
@@ -312,11 +314,13 @@ def scene_entry_arrays(map_specs: Sequence[KmapSpec], st: SparseTensor,
 
     root_table: an already-merged ``CoordTable`` for ``st`` (streaming
     delta path) — adopted so the build skips the scene's root argsort.
+    tables: optional pre-composed deeper-level tables (the incremental
+    cell-ladder path) — see ``build_maps_from_specs``.
     """
     cache = MapCache.for_tensor(st)
     if root_table is not None:
         cache.adopt(st.coords, root_table)
-    maps = build_maps_from_specs(map_specs, st, cache)
+    maps = build_maps_from_specs(map_specs, st, cache, tables=tables)
     root = cache.table(st)   # cache hit: the table the build sorted/adopted
     return maps, root.sorted_keys, root.order
 
@@ -465,10 +469,37 @@ class NetworkPlan:
                    tables: Optional[dict] = None) -> dict:
         return build_maps_from_specs(self.map_specs, st, cache, tables=tables)
 
+    def split_plan_specs(self) -> Tuple[Tuple[tuple, int, bool], ...]:
+        """Deduped (map_ref, n_splits, sorted) triples of every layer whose
+        forward dataflow consumes a ``SplitPlan`` (pallas implicit GEMM) —
+        the executor inputs the serving engine pre-builds/composes so the
+        per-batch bitmask argsorts leave the dispatch hot path."""
+        out = []
+        for lp in self.layers:
+            fwd = lp.dataflow.fwd
+            if fwd.backend == "pallas" and fwd.dataflow == "implicit_gemm":
+                key = (lp.map_ref, fwd.effective_splits, fwd.sorted)
+                if key not in out:
+                    out.append(key)
+        return tuple(out)
+
+    def build_split_plans(self, maps: dict) -> dict:
+        """Fresh (traceable) split plans for every ``split_plan_specs()``
+        triple — the cold-batch fallback when no per-scene cached orders
+        exist to compose."""
+        return {(ref, ns, srt): make_split_plan(maps[ref], ns, sort=srt)
+                for ref, ns, srt in self.split_plan_specs()}
+
     def apply(self, params: dict, st: SparseTensor,
-              maps: Optional[dict] = None, bn_mode: str = "batch") -> jax.Array:
+              maps: Optional[dict] = None, bn_mode: str = "batch",
+              plans: Optional[dict] = None) -> jax.Array:
         """Run the compiled program.  Bit-identical to the models'
-        pre-plan hand-written forwards under the FP32 policy."""
+        pre-plan hand-written forwards under the FP32 policy.
+
+        plans: optional pre-built split plans keyed ``(map_ref, n_splits,
+        sorted)`` (see ``split_plan_specs``); layers without an entry build
+        their plan in-trace as before.
+        """
         if maps is None:
             maps = self.build_maps(st)
         by_name = {lp.name: lp for lp in self.layers}
@@ -479,8 +510,11 @@ class NetworkPlan:
             kind = op[0]
             if kind == "conv":
                 lp = by_name[op[1]]
+                fwd = lp.dataflow.fwd
+                plan = (plans or {}).get(
+                    (lp.map_ref, fwd.effective_splits, fwd.sorted))
                 x = apply_conv(params[lp.name], x, maps[lp.map_ref],
-                               lp.dataflow, precision=lp.precision)
+                               lp.dataflow, precision=lp.precision, plan=plan)
                 if lp.bn:
                     x = bn_relu(params[f"{lp.name}_bn"], x, relu=lp.relu,
                                 mode=bn_mode)

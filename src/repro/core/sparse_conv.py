@@ -63,19 +63,24 @@ DEFAULT_TRAIN_CONFIG = TrainDataflowConfig()
 
 def sparse_conv_apply(feats: jax.Array, w: jax.Array, kmap: KernelMap,
                       cfg: TrainDataflowConfig = DEFAULT_TRAIN_CONFIG,
-                      precision: PrecisionPolicy = FP32) -> jax.Array:
+                      precision: PrecisionPolicy = FP32,
+                      plan=None) -> jax.Array:
     """Differentiable sparse conv with decoupled fwd/dgrad/wgrad dataflows.
 
     ``precision`` applies to all three kernels: bf16 compute / fp32
     accumulate under the mixed policy.  Cotangents are re-cast to the primal
     dtypes as the last step (custom_vjp contract), so the weight gradient
     rounds at most once — after full-precision accumulation — on its way to
-    the optimizer's fp32 master copy."""
+    the optimizer's fp32 master copy.
+
+    ``plan``: optional pre-built ``SplitPlan`` for the forward dataflow
+    (serving composes these per batch); None keeps the build-in-trace path.
+    """
 
     @jax.custom_vjp
     def f(feats, w):
         return df.sparse_conv_forward(feats, w, kmap, cfg.fwd,
-                                      precision=precision)
+                                      precision=precision, plan=plan)
 
     def f_fwd(feats, w):
         return f(feats, w), (feats, w)
@@ -119,10 +124,12 @@ def init_conv(key: jax.Array, spec: ConvSpec, ndim: int = 3, dtype=jnp.float32) 
 
 def apply_conv(params: dict, x: SparseTensor, kmap: KernelMap,
                cfg: TrainDataflowConfig = DEFAULT_TRAIN_CONFIG,
-               precision: PrecisionPolicy = FP32) -> SparseTensor:
+               precision: PrecisionPolicy = FP32,
+               plan=None) -> SparseTensor:
     """Apply a sparse conv given a prebuilt kernel map; returns the output
     SparseTensor on the map's coordinates."""
-    y = sparse_conv_apply(x.feats, params["w"], kmap, cfg, precision=precision)
+    y = sparse_conv_apply(x.feats, params["w"], kmap, cfg, precision=precision,
+                          plan=plan)
     if "b" in params:
         y = y + params["b"][None, :].astype(y.dtype)
     valid = jnp.arange(kmap.capacity) < kmap.n_out

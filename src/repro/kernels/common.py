@@ -22,3 +22,15 @@ def pad_rows(x: jax.Array, multiple: int, value=0) -> jax.Array:
 def default_interpret() -> bool:
     """Pallas kernels run in interpret mode unless a real TPU is attached."""
     return jax.default_backend() != "tpu"
+
+
+def pallas_supported() -> bool:
+    """True when the installed jax can launch this repo's Pallas kernels —
+    they pass ``pltpu.CompilerParams``, absent on older jax (the same probe
+    tests/conftest.py gates the kernel suites behind).  The serving tuner
+    uses this to decide whether the pallas backend axis is searchable."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+    except Exception:
+        return False
+    return hasattr(pltpu, "CompilerParams")

@@ -137,12 +137,19 @@ class SceneBatcher:
         self.ladder = ladder
         self.spatial_bound = int(spatial_bound)
 
-    def plan(self, sizes: Sequence[int]) -> List[List[int]]:
+    def plan(self, sizes: Sequence[int],
+             cut_first: Optional[int] = None) -> List[List[int]]:
         """Greedy FIFO grouping of scene sizes into bucket-fitting batches.
 
         Deterministic: scenes stay in submission order; a batch closes when
         adding the next scene would overflow the largest bucket or exceed
         ``max_batch`` scenes.  Returns lists of scene indices.
+
+        cut_first: optional scene-count cap on the FIRST group only — the
+        engine's deadline-aware admission cuts the head batch so an
+        about-to-expire request stops waiting for co-batched work.  None
+        (default) is the pure greedy grouping (the bit-identity contract
+        path); later groups always use the full ``max_batch``.
         """
         with obs.span("batch_plan", scenes=len(sizes)) as sp:
             groups: List[List[int]] = []
@@ -152,8 +159,11 @@ class SceneBatcher:
                 if n > self.ladder.max_capacity:
                     raise ValueError(f"scene {i} ({n} rows) exceeds largest "
                                      f"bucket ({self.ladder.max_capacity})")
+                limit = (min(cut_first, self.ladder.max_batch)
+                         if cut_first is not None and not groups
+                         else self.ladder.max_batch)
                 if cur and (cur_rows + n > self.ladder.max_capacity
-                            or len(cur) >= self.ladder.max_batch):
+                            or len(cur) >= limit):
                     groups.append(cur)
                     cur, cur_rows = [], 0
                 cur.append(i)

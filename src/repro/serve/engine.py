@@ -27,6 +27,17 @@ Ties the subsystem together (DESIGN: ISSUE 2 tentpole):
   a latency deadline (``max_wait_ms`` — the oldest queued scene's age;
   check via ``poll()`` or any ``submit``), with deadline-triggered flushes
   counted in the engine stats;
+* flushes run **pipelined**: while batch k executes on device, the host
+  builds scene entries, composes maps/plans and packs batch k+1
+  (``jax.block_until_ready`` is deferred to result drain, bounded by
+  ``max_inflight`` dispatched-but-undrained batches — jax's async dispatch
+  makes the overlap real on every backend).  Sorted-dataflow executor
+  inputs (``SplitPlan``s) are merge-composed from per-scene cached orders
+  the same way kernel maps are, so no per-batch bitmask argsort runs on
+  the hot path.  With ``deadline_margin`` set, admission is deadline-aware:
+  the engine predicts service time from its own phase medians and flushes
+  / drains / cuts batches early when the oldest request's ``max_wait_ms``
+  budget is about to be blown;
 * the engine executes a compiled ``core.plan.NetworkPlan`` — the same
   artifact the models and the training stack run — loaded from a
   ``PlanRegistry`` at startup when one was persisted (tune once, serve
@@ -59,7 +70,8 @@ from repro import obs
 from repro.core import dataflows as df
 from repro.core import hashing
 from repro.core.autotuner import timeit_fn
-from repro.core.kmap import SceneEntry, compose_kmaps
+from repro.core.kmap import (SceneEntry, cell_ladder, cell_ladder_delta,
+                             compose_kmaps, compose_split_plans, ladder_tables)
 from repro.core.plan import (KmapSpec, NetworkPlan, PlanTuner,
                              scene_entry_arrays, scene_entry_from_arrays)
 from repro.core.sparse_conv import TrainDataflowConfig
@@ -147,6 +159,35 @@ def summarize_phases(windows: Dict[str, Sequence[float]]) -> Dict[str, dict]:
     return out
 
 
+def _overlap_ns(host_ivs: Sequence[tuple], dev_ivs: Sequence[tuple]):
+    """(host_total, device_total, overlap) in ns of two interval sets, each
+    union-merged first — the pipeline's host-busy/device-busy/overlap
+    accounting (overlap ≈ 0 for a serial depth-1 loop by construction)."""
+    def merge(ivs):
+        out: List[list] = []
+        for a, b in sorted(ivs):
+            if out and a <= out[-1][1]:
+                out[-1][1] = max(out[-1][1], b)
+            else:
+                out.append([a, b])
+        return out
+
+    h, d = merge(host_ivs), merge(dev_ivs)
+    ht = sum(b - a for a, b in h)
+    dt = sum(b - a for a, b in d)
+    ov = 0
+    i = j = 0
+    while i < len(h) and j < len(d):
+        lo, hi = max(h[i][0], d[j][0]), min(h[i][1], d[j][1])
+        if hi > lo:
+            ov += hi - lo
+        if h[i][1] < d[j][1]:
+            i += 1
+        else:
+            j += 1
+    return ht, dt, ov
+
+
 @dataclasses.dataclass
 class EngineStats:
     submitted: int = 0
@@ -159,6 +200,7 @@ class EngineStats:
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
     recompiles: Dict[int, int] = dataclasses.field(default_factory=dict)
     map_compiles: Dict[int, int] = dataclasses.field(default_factory=dict)
+    plan_compiles: Dict[int, int] = dataclasses.field(default_factory=dict)
     map_hits: int = 0
     map_misses: int = 0
     # scene-granular reuse (composed/incremental table strategies)
@@ -170,6 +212,12 @@ class EngineStats:
     # flush triggers beyond the explicit flush() call
     deadline_flushes: int = 0    # max_wait_ms expiries
     count_flushes: int = 0       # flush_count threshold crossings
+    deadline_cuts: int = 0       # batches cut early by deadline admission
+    # pipelined-flush accounting (summary()['pipeline'])
+    inflight_peak: int = 0       # max dispatched-but-undrained batches seen
+    host_busy_s: float = 0.0     # union of host pack/map/dispatch/unpack time
+    device_busy_s: float = 0.0   # union of dispatch→ready device windows
+    overlap_s: float = 0.0       # host-busy ∩ device-busy
     # per-phase duration windows (queue_wait/pack/map/execute/unpack/…) —
     # always on (a perf_counter pair + deque append per phase), independent
     # of whether the tracer is enabled
@@ -205,6 +253,7 @@ class EngineStats:
             "scenes_per_s": self.completed / self.busy_s if self.busy_s else 0.0,
             "recompiles": dict(self.recompiles),
             "map_compiles": dict(self.map_compiles),
+            "plan_compiles": dict(self.plan_compiles),
             "map_cache": {"hits": self.map_hits, "misses": self.map_misses},
             "scene_tables": {"hits": self.scene_hits,
                              "misses": self.scene_misses,
@@ -213,6 +262,14 @@ class EngineStats:
                              "compiles": dict(self.scene_compiles)},
             "deadline_flushes": self.deadline_flushes,
             "count_flushes": self.count_flushes,
+            "deadline_cuts": self.deadline_cuts,
+            "pipeline": {
+                "inflight_peak": self.inflight_peak,
+                "host_busy_s": self.host_busy_s,
+                "device_busy_s": self.device_busy_s,
+                "overlap_s": self.overlap_s,
+                "overlap_frac": (self.overlap_s / self.device_busy_s
+                                 if self.device_busy_s else 0.0)},
             "phases": summarize_phases(self.phases),
             "slo": {"deadline_ms": self.slo_deadline_ms,
                     "measured": self.slo_measured,
@@ -239,6 +296,24 @@ class Engine:
     scene_cache_size: LRU bound of the per-scene store.  Entries are
         host-resident numpy map stacks (~ refs x KD x scene-rung int32
         words each), so size this by host RAM, not device memory.
+    scene_cache_bytes: optional byte bound on the same store — eviction by
+        the actual ``SceneEntry.nbytes`` footprint (split-order and ladder
+        caches included), which tracks residency far better than an entry
+        count when scene sizes span rungs.  Both bounds apply when set.
+    max_inflight: dispatched-but-undrained batch window of a pipelined
+        flush.  1 restores the strictly serial dispatch→block loop; the
+        default 2 double-buffers host mapping/packing against device
+        execution.  Outputs are bit-identical at any depth — batches are
+        independent and drain in FIFO order.
+    deadline_margin: None (default) keeps deadline handling purely
+        age-based (flush when the oldest request has waited max_wait_ms).
+        A float enables deadline-*aware* admission: the engine predicts
+        remaining service time as ``margin ×`` the median of its own
+        pack/map/dispatch/execute/unpack phases and (a) auto-flushes early
+        so requests finish inside the budget, (b) drains the in-flight
+        window before dispatching more when the head batch is about to
+        miss, and (c) cuts the first batch of a flush down to the urgent
+        scene instead of co-batching it with fresh work.
     device: pin this engine to one jax device — params and every packed
         batch are ``jax.device_put`` there, so each compiled rung's
         executor runs on that device.  None (default) follows jax's default
@@ -256,8 +331,11 @@ class Engine:
                  maps_cache_size: int = 32, seed: int = 0,
                  precision=None, map_strategy: Optional[str] = None,
                  scene_cache_size: int = 64,
+                 scene_cache_bytes: Optional[int] = None,
                  max_wait_ms: Optional[float] = None,
                  flush_count: Optional[int] = None,
+                 max_inflight: int = 2,
+                 deadline_margin: Optional[float] = None,
                  device: Optional[jax.Device] = None,
                  plan_key: Optional[str] = None):
         if arch not in ARCHS:
@@ -297,9 +375,13 @@ class Engine:
         assert self.map_strategy in KmapSpec.TABLE_STRATEGIES, self.map_strategy
         self.max_wait_ms = max_wait_ms
         self.flush_count = flush_count
+        assert max_inflight >= 1, max_inflight
+        self.max_inflight = max_inflight
+        self.deadline_margin = deadline_margin
         self.stats = EngineStats()
         self.maps_cache_size = maps_cache_size
         self.scene_cache_size = scene_cache_size
+        self.scene_cache_bytes = scene_cache_bytes
         self._queue: List[tuple] = []       # (ticket, Scene, t_submit)
         self._next_ticket = 0
         self._ready: Dict[int, SceneResult] = {}   # auto-flushed results
@@ -316,8 +398,13 @@ class Engine:
         self.stream_cache_size = 1024
         self._builders: Dict[int, Callable] = {}
         self._executors: Dict[int, Callable] = {}
+        self._plan_builders: Dict[int, Callable] = {}
         self._scene_builders: Dict[int, Callable] = {}
         self._scene_delta_builders: Dict[int, Callable] = {}
+        #: down-map out-strides, ascending — the cell ladder's levels
+        self._down_strides = tuple(sorted(
+            ms.tensor_stride * ms.stride for ms in self.nplan.map_specs
+            if ms.kind == "down"))
         #: (kind, rung) marks queued by trace-time side effects, drained by
         #: the jit wrappers into structured ``compile`` trace events
         self._compile_marks: List[tuple] = []
@@ -395,12 +482,25 @@ class Engine:
         if fn is None:
             binding, cfg, nplan = self.binding, self.cfg, self.nplan
 
-            def run(params, st, maps):
-                feats = nplan.apply(params, st, maps, bn_mode="affine")
+            def run(params, st, maps, plans):
+                feats = nplan.apply(params, st, maps, bn_mode="affine",
+                                    plans=plans)
                 return binding.outputs_of(cfg, st, maps, feats)
 
             fn = self._jit_counting(run, "executor", "recompiles", cap)
             self._executors[cap] = fn
+        return fn
+
+    def _plan_builder_for(self, cap: int) -> Callable:
+        """Jitted fresh split-plan build (the cold-batch fallback when no
+        per-scene orders exist to compose) — counted separately from map
+        compiles so the per-rung map/executor compile contracts hold."""
+        fn = self._plan_builders.get(cap)
+        if fn is None:
+            nplan = self.nplan
+            fn = self._jit_counting(nplan.build_split_plans, "plan_builder",
+                                    "plan_compiles", cap)
+            self._plan_builders[cap] = fn
         return fn
 
     # ------------------------------------------------------ scene-granular
@@ -434,16 +534,21 @@ class Engine:
     def _scene_delta_builder_for(self, cap: int) -> Callable:
         """Like the scene builder, but adopting a delta-merged root table
         (passed as arrays, padded to ``cap``) so the build skips the scene
-        argsort."""
+        argsort — and, when the stream's cell ladder is live, adopting the
+        incrementally-updated down-level tables (``lkeys``/``lns``, also
+        padded to ``cap``) so no per-level masked-key argsort runs either:
+        the whole delta rebuild is binary searches over adopted tables."""
         fn = self._scene_delta_builders.get(cap)
         if fn is None:
             specs = self.nplan.map_specs
 
-            def build(st, keys, order):
+            def build(st, keys, order, lkeys, lns):
                 spec = hashing.key_spec_for(st.ndim_space, st.batch_bound,
                                             st.spatial_bound)
+                tables = {s: (lkeys[s], None, lns[s]) for s in lkeys}
                 maps, k, o = scene_entry_arrays(
-                    specs, st, root_table=hashing.CoordTable(spec, keys, order))
+                    specs, st, root_table=hashing.CoordTable(spec, keys, order),
+                    tables=tables)
                 return maps, k, o
 
             fn = self._jit_counting(build, "scene_delta_builder",
@@ -451,9 +556,21 @@ class Engine:
             self._scene_delta_builders[cap] = fn
         return fn
 
+    def _key_spec(self, ndim_space: int) -> hashing.KeySpec:
+        """The packed-key spec every scene/batch table of this engine uses
+        (bounds are the engine's declared promises)."""
+        return hashing.key_spec_for(ndim_space, self.ladder.max_batch,
+                                    self.batcher.spatial_bound)
+
     def _store_scene(self, digest: str, entry: SceneEntry) -> None:
         with self._scene_lock:
             self._scene_store[digest] = entry
+            if self.scene_cache_bytes is not None:
+                # byte-aware eviction: keep at least the entry just stored
+                while (len(self._scene_store) > 1 and
+                       sum(e.nbytes for e in self._scene_store.values())
+                       > self.scene_cache_bytes):
+                    self._scene_store.popitem(last=False)
             while len(self._scene_store) > self.scene_cache_size:
                 self._scene_store.popitem(last=False)
 
@@ -471,18 +588,31 @@ class Engine:
                 self._scene_tensor(scene, cap))
             ent = scene_entry_from_arrays(self.nplan.map_specs, maps,
                                           scene.num_points, keys, order)
+            if self.map_strategy == "incremental":
+                # seed the stream's cell ladder so later deltas propagate
+                # down the pyramid incrementally instead of re-deriving it
+                ent.ladder = cell_ladder(
+                    self._key_spec(scene.coords.shape[1]), ent.root_keys,
+                    self._down_strides)
         self._store_scene(scene.digest, ent)
         return ent
 
     def _maps_for(self, batch: PackedBatch,
-                  scenes: Optional[Sequence[Scene]] = None) -> dict:
-        maps = self._map_store.get(batch.digest)
-        if maps is not None:
+                  scenes: Optional[Sequence[Scene]] = None) -> Tuple[dict, dict]:
+        """Batch kernel maps + pre-built executor split plans (``{}`` when no
+        layer consumes one).  Composed batches also *compose* their plans —
+        per-scene stable-sorted bitmask orders merge host-side, so sorted
+        dataflows stop paying a per-batch argsort; cold fallbacks build the
+        plans jitted alongside the maps."""
+        cached = self._map_store.get(batch.digest)
+        if cached is not None:
             self.stats.map_hits += 1
             self._map_store.move_to_end(batch.digest)
-            return maps
+            return cached
         self.stats.map_misses += 1
+        pspecs = self.nplan.split_plan_specs()
         maps = None
+        plans: dict = {}
         if scenes is not None and self.map_strategy in ("composed",
                                                         "incremental"):
             # includes nested scene_build spans for any cold scenes
@@ -492,13 +622,21 @@ class Engine:
                 maps = compose_kmaps(entries, batch.bucket)
             if maps is not None:
                 self.stats.composed_batches += 1
+                if pspecs:
+                    with self._phase("compose_plans", bucket=batch.bucket):
+                        for ref, ns, srt in pspecs:
+                            plans[(ref, ns, srt)] = compose_split_plans(
+                                entries, ref, ns, srt, batch.bucket)
         if maps is None:
             with self._phase("map_build", bucket=batch.bucket):
                 maps = self._builder_for(batch.bucket)(batch.st)
-        self._map_store[batch.digest] = maps
+            if pspecs:
+                with self._phase("plan_build", bucket=batch.bucket):
+                    plans = self._plan_builder_for(batch.bucket)(maps)
+        self._map_store[batch.digest] = (maps, plans)
         while len(self._map_store) > self.maps_cache_size:
             self._map_store.popitem(last=False)
-        return maps
+        return maps, plans
 
     # ------------------------------------------------------------------ api
     def submit(self, scene: Scene, stream: Optional[str] = None) -> int:
@@ -564,16 +702,17 @@ class Engine:
                 with self._phase("delta_merge", stream=stream,
                                  added=int(delta.added_coords.shape[0]),
                                  removed=int(delta.removed.shape[0])):
-                    spec = hashing.key_spec_for(scene.coords.shape[1],
-                                                self.ladder.max_batch,
-                                                self.batcher.spatial_bound)
+                    spec = self._key_spec(scene.coords.shape[1])
+                    rm_rows = np.concatenate(
+                        [np.zeros((delta.removed.shape[0], 1), np.int32),
+                         delta.removed], 1)
+                    ad_rows = np.concatenate(
+                        [np.zeros((delta.added_coords.shape[0], 1), np.int32),
+                         delta.added_coords], 1)
                     # host-side O(r+a) sorted merge of the cached scene table
                     mkeys, morder = hashing.np_delta_merge(
                         spec, prev_ent.root_keys, prev_ent.root_order,
-                        np.concatenate([np.zeros((delta.removed.shape[0], 1),
-                                                 np.int32), delta.removed], 1),
-                        np.concatenate([np.zeros((delta.added_coords.shape[0], 1),
-                                                 np.int32), delta.added_coords], 1))
+                        rm_rows, ad_rows)
                     # pad the merged table up to the scene rung — identical to
                     # a fresh build of the padded scene tensor (PAD keys sort
                     # last, pad rows in slot order), so the jitted builder
@@ -585,19 +724,72 @@ class Engine:
                         mkeys, np.full(pad, np.iinfo(np.int32).max, np.int32)])
                     order = np.concatenate([
                         morder, np.arange(n, cap, dtype=np.int32)])
+                    # propagate the delta through the cached cell ladder —
+                    # every down level's table updates in O(r+a+cells), so
+                    # the rebuild below adopts tables at EVERY pyramid level
+                    # (no per-level masked-key argsort on the merged root)
+                    if prev_ent.ladder:
+                        lad = cell_ladder_delta(
+                            spec, prev_ent.ladder,
+                            hashing.np_pack_keys(rm_rows, spec),
+                            hashing.np_pack_keys(ad_rows, spec))
+                    else:
+                        lad = cell_ladder(spec, mkeys, self._down_strides)
+                    tabs = ladder_tables(spec, lad, cap)
                     maps, k, o = self._scene_delta_builder_for(cap)(
                         self._scene_tensor(scene, cap), jnp.asarray(keys),
-                        jnp.asarray(order))
+                        jnp.asarray(order),
+                        {s: jnp.asarray(t[0]) for s, t in tabs.items()},
+                        {s: jnp.asarray(t[2], jnp.int32)
+                         for s, t in tabs.items()})
                     ent = scene_entry_from_arrays(self.nplan.map_specs, maps,
                                                   n, k, o)
+                    ent.ladder = lad
                     self._store_scene(scene.digest, ent)
                     self.stats.delta_merges += 1
         return scene
 
+    def _predicted_service_ms(self) -> float:
+        """Predicted service time of one batch: the sum of this engine's own
+        median pack/map/dispatch/execute/unpack phase durations (0.0 until
+        warm — deadline awareness then degrades to pure age checks)."""
+        total = 0.0
+        for name in ("pack", "map", "dispatch", "execute", "unpack"):
+            window = self.stats.phases.get(name)
+            if window:
+                total += float(np.median(window))
+        return total
+
+    def _deadline_budget_ms(self) -> Optional[float]:
+        """The age at which a queued request must start service: plain
+        ``max_wait_ms`` by default, shrunk by the predicted service time
+        (× ``deadline_margin``) under deadline-aware admission."""
+        if self.max_wait_ms is None:
+            return None
+        if self.deadline_margin is None:
+            return self.max_wait_ms
+        return self.max_wait_ms - (self.deadline_margin *
+                                   self._predicted_service_ms())
+
     def _deadline_due(self) -> bool:
-        return (self.max_wait_ms is not None and bool(self._queue) and
-                (time.perf_counter() - self._queue[0][2]) * 1e3
-                >= self.max_wait_ms)
+        budget = self._deadline_budget_ms()
+        return (budget is not None and bool(self._queue) and
+                (time.perf_counter() - self._queue[0][2]) * 1e3 >= budget)
+
+    def _deadline_cut(self, queue: Sequence[tuple]) -> Optional[int]:
+        """Deadline-aware batch cutting: when the oldest request's budget is
+        (nearly) blown at flush start, serve it alone instead of co-batching
+        it with fresh arrivals — returns the first-group scene cap for
+        ``SceneBatcher.plan``."""
+        if self.deadline_margin is None or self.max_wait_ms is None:
+            return None
+        if len(queue) <= 1:
+            return None
+        age_ms = (time.perf_counter() - queue[0][2]) * 1e3
+        if age_ms >= self._deadline_budget_ms():
+            self.stats.deadline_cuts += 1
+            return 1
+        return None
 
     def _autoflush(self) -> None:
         if self.flush_count is not None and len(self._queue) >= self.flush_count:
@@ -637,31 +829,89 @@ class Engine:
                 batch = dataclasses.replace(
                     batch, st=jax.device_put(batch.st, self.device))
         with self._phase("map", bucket=batch.bucket):
-            maps = self._maps_for(batch, scenes)
+            maps, plans = self._maps_for(batch, scenes)
         with self._phase("dispatch", bucket=batch.bucket,
                          device=self.device_name):
-            out = self._executor_for(batch.bucket)(self.params, batch.st, maps)
+            out = self._executor_for(batch.bucket)(self.params, batch.st,
+                                                   maps, plans)
         return batch, out
 
-    def _finish_group(self, batch: PackedBatch, out) -> List[SceneResult]:
-        """Block on a dispatched batch and unpack it into per-scene rows."""
-        with self._phase("execute", bucket=batch.bucket,
-                         device=self.device_name):
-            out_coords, out_feats, n_out = jax.block_until_ready(out)
+    def _finish_group(self, batch: PackedBatch, out,
+                      t_disp_ns: Optional[int] = None):
+        """Block on a dispatched batch and unpack it into per-scene rows.
+        Returns ``(ready_timestamp_ns, per_scene_results)``.
+
+        ``t_disp_ns`` (pipelined drains) backdates the "execute" span to
+        dispatch-return so it covers the device-side window the host
+        overlapped — recorded retroactively via ``obs.record_span`` because
+        the host was busy with batch k+1 while it ran."""
+        t0 = time.perf_counter_ns()
+        out_coords, out_feats, n_out = jax.block_until_ready(out)
+        t1 = time.perf_counter_ns()
+        start = t0 if t_disp_ns is None else t_disp_ns
+        self.stats.observe("execute", (t1 - start) / 1e6)
+        obs.record_span("execute", start, t1, bucket=batch.bucket,
+                        device=self.device_name)
         with self._phase("unpack", bucket=batch.bucket,
                          scenes=batch.num_scenes):
             per_scene = self.batcher.unpack(batch, out_coords, out_feats,
                                             int(n_out), self.out_stride)
         self.stats.batches += 1
         self.stats.completed += batch.num_scenes
-        return per_scene
+        return t1, per_scene
+
+    def _run_pipeline(self, scene_groups: Sequence[Sequence[Scene]],
+                      on_done: Callable,
+                      urgent: Optional[Callable[[int], bool]] = None) -> None:
+        """Double-buffered group execution: dispatch group k+1 (host pack /
+        map compose / executor call — all non-blocking under jax async
+        dispatch) while group k executes on device; drain FIFO, bounded by
+        ``max_inflight`` dispatched-but-undrained batches.
+
+        Bit-identical to the serial loop at any depth: grouping, packing,
+        composition and unpacking are untouched — only the position of
+        ``block_until_ready`` moves, and batches are independent.
+
+        on_done(group_index, batch, per_scene) fires at each drain, in
+        group order.  urgent(head_group_index) — deadline admission — forces
+        draining the oldest in-flight batch before the next dispatch.
+        """
+        inflight: "collections.deque" = collections.deque()
+        host_ivs: List[tuple] = []
+        dev_ivs: List[tuple] = []
+
+        def drain_one():
+            gi, batch, out, t_disp = inflight.popleft()
+            t_ready, per_scene = self._finish_group(batch, out, t_disp)
+            dev_ivs.append((t_disp, t_ready))
+            host_ivs.append((t_ready, time.perf_counter_ns()))  # unpack
+            on_done(gi, batch, per_scene)
+
+        for gi, scenes in enumerate(scene_groups):
+            while inflight and (len(inflight) >= self.max_inflight or
+                                (urgent is not None and urgent(inflight[0][0]))):
+                drain_one()
+            h0 = time.perf_counter_ns()
+            batch, out = self._dispatch_group(scenes)
+            t_disp = time.perf_counter_ns()
+            host_ivs.append((h0, t_disp))
+            inflight.append((gi, batch, out, t_disp))
+            if len(inflight) > self.stats.inflight_peak:
+                self.stats.inflight_peak = len(inflight)
+        while inflight:
+            drain_one()
+        ht, dt, ov = _overlap_ns(host_ivs, dev_ivs)
+        self.stats.host_busy_s += ht / 1e9
+        self.stats.device_busy_s += dt / 1e9
+        self.stats.overlap_s += ov / 1e9
 
     def _run_queue(self) -> Dict[int, SceneResult]:
         if not self._queue:
             return {}
         queue, self._queue = self._queue, []
         t0 = time.perf_counter()
-        with obs.span("flush", scenes=len(queue), device=self.device_name):
+        with obs.span("flush", scenes=len(queue), device=self.device_name,
+                      max_inflight=self.max_inflight):
             # queue wait = submit → flush start; submit stamped the same
             # monotonic clock the tracer uses, so the interval replays
             # exactly in the trace timeline
@@ -672,14 +922,13 @@ class Engine:
                 obs.record_span("queue_wait", int(t_sub * 1e9), t0_ns,
                                 ticket=ticket)
             results: Dict[int, SceneResult] = {}
-            groups = self.batcher.plan([s.num_points for _, s, _ in queue])
-            for group in groups:
-                batch, out = self._dispatch_group(
-                    [queue[i][1] for i in group])
-                per_scene = self._finish_group(batch, out)
+            groups = self.batcher.plan([s.num_points for _, s, _ in queue],
+                                       cut_first=self._deadline_cut(queue))
+
+            def on_done(gi, batch, per_scene):
                 t_done = time.perf_counter()
                 t_done_ns = time.perf_counter_ns()
-                for slot, i in enumerate(group):
+                for slot, i in enumerate(groups[gi]):
                     ticket, _, t_sub = queue[i]
                     results[ticket] = per_scene[slot]
                     lat_ms = (t_done - t_sub) * 1e3
@@ -689,6 +938,16 @@ class Engine:
                     if self.max_wait_ms is not None:
                         # max_wait_ms doubles as the per-request latency SLO
                         self.stats.slo_observe(lat_ms, self.max_wait_ms)
+
+            urgent = None
+            if self.deadline_margin is not None and self.max_wait_ms is not None:
+                def urgent(gi):
+                    oldest = min(queue[i][2] for i in groups[gi])
+                    age_ms = (time.perf_counter() - oldest) * 1e3
+                    return age_ms >= self._deadline_budget_ms()
+
+            self._run_pipeline([[queue[i][1] for i in g] for g in groups],
+                               on_done, urgent)
         self.stats.busy_s += time.perf_counter() - t0
         self.stats.flushes += 1
         return results
@@ -724,9 +983,20 @@ class Engine:
                 maps, keys, order = jax.block_until_ready(
                     self._scene_builder_for(cap)(st))
                 if self.map_strategy == "incremental":
-                    # the fresh table doubles as a valid adopted-table input
+                    # the fresh table doubles as a valid adopted-table input;
+                    # derive its cell ladder so the traced pytree structure
+                    # matches live delta-merge calls exactly
+                    m = coords.shape[0]
+                    spec = self._key_spec(coords.shape[1])
+                    lad = cell_ladder(spec, np.asarray(keys)[:m],
+                                      self._down_strides)
+                    tabs = ladder_tables(spec, lad, cap)
                     jax.block_until_ready(
-                        self._scene_delta_builder_for(cap)(st, keys, order))
+                        self._scene_delta_builder_for(cap)(
+                            st, keys, order,
+                            {s: jnp.asarray(t[0]) for s, t in tabs.items()},
+                            {s: jnp.asarray(t[2], jnp.int32)
+                             for s, t in tabs.items()}))
         for cap in self.ladder.capacities:
             n = cap   # fill the bucket exactly so every rung compiles
             rng = np.random.default_rng(cap)
@@ -755,14 +1025,13 @@ class Engine:
         the per-group assignment for inspection; the serialized plan (and
         its v1-compatible assignment block) lands in the registry.
         """
-        space = list(space or [df.DataflowConfig("gather_scatter"),
-                               df.DataflowConfig("implicit_gemm", n_splits=1)])
+        space = list(space or df.default_serving_space())
         sample_scenes = list(sample_scenes)
         # measure on the first bucket-fitting FIFO group of the sample
         group = self.batcher.plan([s.num_points for s in sample_scenes])[0]
         group_scenes = [sample_scenes[i] for i in group]
         batch = self.batcher.pack(group_scenes)
-        maps = self._maps_for(batch, group_scenes)
+        maps, _ = self._maps_for(batch, group_scenes)
 
         def measure(candidate: NetworkPlan) -> float:
             fn = jax.jit(lambda p, st, m: candidate.apply(p, st, m,
@@ -776,5 +1045,6 @@ class Engine:
         self.plans.set(self.plan_key, self.assignment, network=tuned)
         if save and self.plans.path:
             self.plans.save()
-        self._executors.clear()   # recompile with the tuned plan
+        self._executors.clear()     # recompile with the tuned plan
+        self._plan_builders.clear()  # split-plan specs may have changed
         return dict(self.assignment)

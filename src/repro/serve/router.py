@@ -140,6 +140,8 @@ class RouterStats:
         slo_measured = self.slo_measured + sum(s.slo_measured for s in stats)
         slo_misses = (self.slo_miss_count
                       + sum(s.slo_miss_count for s in stats))
+        device_busy = sum(s.device_busy_s for s in stats)
+        overlap = sum(s.overlap_s for s in stats)
         return {
             "scenes": completed,
             "batches": sum(s.batches for s in stats),
@@ -149,11 +151,20 @@ class RouterStats:
             "scenes_per_s": completed / self.busy_s if self.busy_s else 0.0,
             "recompiles": self._merge_counter("recompiles"),
             "map_compiles": self._merge_counter("map_compiles"),
+            "plan_compiles": self._merge_counter("plan_compiles"),
             "map_cache": {"hits": sum(s.map_hits for s in stats),
                           "misses": sum(s.map_misses for s in stats)},
             "scene_tables": scene_tables,
             "deadline_flushes": self.deadline_flushes,
             "count_flushes": self.count_flushes,
+            "deadline_cuts": sum(s.deadline_cuts for s in stats),
+            "pipeline": {
+                "inflight_peak": max((s.inflight_peak for s in stats),
+                                     default=0),
+                "host_busy_s": sum(s.host_busy_s for s in stats),
+                "device_busy_s": device_busy,
+                "overlap_s": overlap,
+                "overlap_frac": overlap / device_busy if device_busy else 0.0},
             "phases": summarize_phases(windows),
             "slo": {
                 "deadline_ms": self.slo_deadline_ms,
@@ -175,6 +186,11 @@ class DeviceRouter:
     parallel: run workers' assigned batches in one thread per worker
         (default).  False serializes workers on the caller thread — same
         results, useful for debugging; routing is identical either way.
+    max_inflight / deadline_margin / scene_cache_bytes are forwarded to
+        every worker: each device runs its assigned shard through the
+        engine's double-buffered pipeline, so one worker overlaps its *own*
+        host mapping with its own device compute on top of the cross-worker
+        thread overlap.
     Remaining arguments match ``Engine``.
     """
 
@@ -186,8 +202,11 @@ class DeviceRouter:
                  maps_cache_size: int = 32, seed: int = 0,
                  precision=None, map_strategy: Optional[str] = None,
                  scene_cache_size: int = 64,
+                 scene_cache_bytes: Optional[int] = None,
                  max_wait_ms: Optional[float] = None,
                  flush_count: Optional[int] = None,
+                 max_inflight: int = 2,
+                 deadline_margin: Optional[float] = None,
                  parallel: bool = True):
         if arch not in ARCHS:
             raise ValueError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
@@ -200,6 +219,8 @@ class DeviceRouter:
         self.parallel = parallel
         self.max_wait_ms = max_wait_ms
         self.flush_count = flush_count
+        self.max_inflight = max_inflight
+        self.deadline_margin = deadline_margin
         if isinstance(plans, str):
             plans = PlanRegistry.load(plans)
         self.plans = plans or PlanRegistry()
@@ -212,7 +233,11 @@ class DeviceRouter:
                    model_config=cfg, params=params, plans=self.plans,
                    maps_cache_size=maps_cache_size, seed=seed,
                    precision=precision, map_strategy=map_strategy,
-                   scene_cache_size=scene_cache_size, device=dev,
+                   scene_cache_size=scene_cache_size,
+                   scene_cache_bytes=scene_cache_bytes,
+                   max_wait_ms=max_wait_ms, device=dev,
+                   max_inflight=max_inflight,
+                   deadline_margin=deadline_margin,
                    plan_key=self.plans.resolve_key(arch, i))
             for i, dev in enumerate(self.devices)]
         # one host-side scene store (and guard) for the whole tier: entries
@@ -290,9 +315,12 @@ class DeviceRouter:
         return self.submit(scene, stream=stream)
 
     def _deadline_due(self) -> bool:
-        return (self.max_wait_ms is not None and bool(self._queue) and
-                (time.perf_counter() - self._queue[0][2]) * 1e3
-                >= self.max_wait_ms)
+        # worker 0 holds the tier's deadline budget: plain ``max_wait_ms``
+        # by default, shrunk by the predicted service time under
+        # ``deadline_margin`` (its phase windows are as warm as any worker's)
+        budget = self.workers[0]._deadline_budget_ms()
+        return (budget is not None and bool(self._queue) and
+                (time.perf_counter() - self._queue[0][2]) * 1e3 >= budget)
 
     def _autoflush(self) -> None:
         if self.flush_count is not None and len(self._queue) >= self.flush_count:
@@ -335,8 +363,11 @@ class DeviceRouter:
                             ticket=ticket)
         sizes = [s.num_points for _, s, _ in queue]
         # identical FIFO grouping to the single-device engine (bit-identity
-        # contract), then each whole group is routed to one device
-        groups = self.batcher.plan(sizes)
+        # contract), then each whole group is routed to one device; worker
+        # 0's deadline-cut (margin-aware) caps the head group exactly as the
+        # single engine would
+        groups = self.batcher.plan(sizes,
+                                   cut_first=self.workers[0]._deadline_cut(queue))
         shards: List[List[Tuple[List[int], int]]] = [[] for _ in self.workers]
         for group in groups:
             rows = self.ladder.group_capacity([sizes[i] for i in group])
@@ -347,18 +378,32 @@ class DeviceRouter:
             done = []
             items = shards[wi]
             n_done = 0
+
+            def on_done(k, batch, per_scene):
+                # fires at each pipeline drain, in shard order: settle the
+                # load score the moment the batch's results exist
+                nonlocal n_done
+                group, rows = items[k]
+                self.outstanding_rows[wi] -= rows
+                n_done += 1
+                w.stats.routed_batches += 1
+                done.append((group, per_scene, time.perf_counter()))
+
+            urgent = None
+            if self.deadline_margin is not None and self.max_wait_ms is not None:
+                def urgent(k):
+                    oldest = min(queue[i][2] for i in items[k][0])
+                    budget = w._deadline_budget_ms()
+                    return (budget is not None and
+                            (time.perf_counter() - oldest) * 1e3 >= budget)
+
             try:
                 with obs.span("shard", device=f"d{wi}",
                               device_name=str(w.device),
                               batches=len(items)):
-                    for group, rows in items:
-                        batch, out = w._dispatch_group(
-                            [queue[i][1] for i in group])
-                        per_scene = w._finish_group(batch, out)
-                        self.outstanding_rows[wi] -= rows
-                        n_done += 1
-                        w.stats.routed_batches += 1
-                        done.append((group, per_scene, time.perf_counter()))
+                    w._run_pipeline(
+                        [[queue[i][1] for i in group] for group, _ in items],
+                        on_done, urgent)
             finally:
                 # a raising batch aborts the shard: un-charge it and every
                 # unprocessed group, or the leaked load score would bias

@@ -127,6 +127,41 @@ def test_plan_registry_rejects_bad_version(tmp_path):
         PlanRegistry.load(str(p))
 
 
+def test_default_serving_space_spans_dataflows_and_backends():
+    """The tuner's default space searches all three dataflows on both
+    backends when the installed jax can run Pallas (interpret mode on CPU),
+    and degrades to the XLA triple when it can't — never an error."""
+    forced = df.default_serving_space(include_pallas=True)
+    assert len(forced) == 6
+    assert {c.dataflow for c in forced} == set(df.DATAFLOWS)
+    assert {c.backend for c in forced} == {"xla", "pallas"}
+    xla_only = df.default_serving_space(include_pallas=False)
+    assert len(xla_only) == 3
+    assert all(c.backend == "xla" for c in xla_only)
+    assert {c.dataflow for c in xla_only} == set(df.DATAFLOWS)
+    # the probing default resolves to exactly one of the two shapes
+    assert df.default_serving_space() in (xla_only, forced)
+
+
+def test_pallas_assignment_roundtrips_plan_registry(tmp_path):
+    """A tuner pick on the Pallas axis persists through ``PlanRegistry``
+    and reloads into an engine intact — including the split-plan demand it
+    creates on the executor-input side."""
+    reg = PlanRegistry()
+    assignment = {(1, 3, "sub"): TrainDataflowConfig.bind_all(
+        df.DataflowConfig("implicit_gemm", n_splits=2, backend="pallas"))}
+    reg.set("minkunet_kitti", assignment)
+    path = reg.save(str(tmp_path / "plans.json"))
+    eng = Engine("minkunet_kitti", ladder=BucketLadder((256,), max_batch=2),
+                 spatial_bound=64, plans=path)
+    assert eng.assignment == assignment
+    assert eng.assignment[(1, 3, "sub")].fwd.backend == "pallas"
+    # the pallas implicit-GEMM choice declares pre-built executor split
+    # plans on the compiled plan (composed per batch by the serving engine)
+    specs = eng.nplan.split_plan_specs()
+    assert specs and all(ns == 2 and srt for _, ns, srt in specs)
+
+
 def test_dataflow_config_dict_roundtrip():
     cfg = df.DataflowConfig("fetch_on_demand", n_splits=0, tile_m=32,
                             tile_n=64, backend="pallas")

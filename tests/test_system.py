@@ -1,6 +1,7 @@
 """End-to-end behaviour: autotuned MinkUNet training, the full tuner loop on
 a real model, and the serving path."""
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -51,10 +52,12 @@ def test_autotuner_end_to_end_on_minkunet():
     own measurements.
 
     Deliberately load-tolerant: asserting relative wall-clock of two fresh
-    measurements flakes under CPU contention (CI neighbors), so instead we
-    check structure — every group got a config from the space, and per
-    group the tuner chose exactly the argmin of the latencies *it measured*
-    (monotone non-worsening objective by construction)."""
+    measurements flakes under CPU contention (CI neighbors), so nothing
+    here thresholds a duration — timing is printed for information only.
+    What is asserted is structure: the tuner measured every (group,
+    candidate) pair exactly once, every group got a config from the space,
+    and per group the tuner chose exactly the argmin of the latencies *it
+    measured* (monotone non-worsening objective by construction)."""
     cfg = minkunet.MinkUNetConfig(width=0.25, blocks_per_stage=1)
     stx = lidar_scene(jax.random.PRNGKey(0), 250, 256, 4, extent=20.0, voxel=0.5)
     params = minkunet.init_params(cfg, jax.random.PRNGKey(1))
@@ -67,13 +70,22 @@ def test_autotuner_end_to_end_on_minkunet():
 
     sig_of_group = {g.name: sigs[g.layer_names[0]] for g in groups}
 
+    n_calls = 0
+
     def measure(assign):
+        nonlocal n_calls
+        n_calls += 1
         amap = {sig_of_group[k]: TrainDataflowConfig.bind_all(v) for k, v in assign.items()}
         fn = jax.jit(lambda p: minkunet.apply(p, stx, cfg, maps, assignment=amap))
         return timeit_fn(lambda: jax.block_until_ready(fn(params)), warmup=1, iters=2)
 
+    t_tune = time.perf_counter()
     tuner = Autotuner(groups, space, measure)
     best = tuner.tune()
+    print(f"[autotuner] {n_calls} measurements, "
+          f"{time.perf_counter() - t_tune:.1f}s wall (informational)")
+    # exhaustive sweep, no re-measurement: one call per (group, candidate)
+    assert n_calls == len(groups) * len(space)
     # valid assignment: every group assigned, every choice from the space
     assert set(best) == {g.name for g in groups}
     assert all(c in space for c in best.values())

@@ -81,6 +81,25 @@ def run(tiny: bool = False):
     common.emit("kmap/plan_occupancy/separate", common.time_fn(lambda: fn_sep(), iters=iters), "")
     common.emit("kmap/plan_occupancy/fused", common.time_fn(lambda: fn_fused(), iters=iters), "")
 
+    # the table-build sort itself: O(N·bits) radix (what CoordTable.build
+    # now runs for bounded keys) vs the stable comparison argsort it
+    # replaced — same permutation, different asymptotics
+    from repro.core import hashing
+    spec = hashing.key_spec_for(3, stx.batch_bound, stx.spatial_bound)
+    keys = hashing.pack_keys(stx.coords, spec, valid=stx.valid_mask)
+    assert hashing.radix_word_bits(spec) is not None, "scene spec unbounded?"
+    fn_radix = jax.jit(lambda: hashing.radix_argsort_keys(keys, spec))
+    if keys.ndim == 1:
+        fn_cmp = jax.jit(lambda: jax.numpy.argsort(keys, stable=True))
+    else:
+        fn_cmp = jax.jit(lambda: hashing.lex_argsort(keys))
+    us_r = common.time_fn(lambda: fn_radix(), iters=iters)
+    us_c = common.time_fn(lambda: fn_cmp(), iters=iters)
+    common.emit("kmap/key_sort/radix", us_r, "")
+    common.emit("kmap/key_sort/argsort", us_c, "")
+    common.emit("kmap/speedup/key_sort", 0.0,
+                f"radix_vs_argsort={us_c / max(us_r, 1e-9):.2f}x")
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()

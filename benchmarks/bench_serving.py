@@ -186,6 +186,54 @@ def _plan_compose_leg(arch: str, scenes, bound: int, ladder: BucketLadder,
         f"specs={len(specs)}")
 
 
+def _pallas_leg(arch: str, scenes, bound: int, ladder: BucketLadder,
+                reps: int):
+    """The Pallas kernel tier vs the XLA dataflow on one packed batch's
+    stem layer: dense-grid implicit GEMM and the tile-skipping worklist
+    variant, with the *effective* backend of each config in the derived
+    column.  On CPU containers the Pallas numbers are interpret-mode
+    (kernel logic under the Pallas interpreter — orders slower than XLA,
+    and the ratio is informational only); the leg's job in CI is to pin
+    the tier as measurable and bit-exact everywhere, so the same sweep
+    reports real MXU ratios the day it lands on a TPU."""
+    from repro.core import dataflows as df
+    from repro.kernels.common import default_interpret
+
+    eng = Engine(arch, ladder=ladder, spatial_bound=bound)
+    group = eng.batcher.plan([s.num_points for s in scenes])[0]
+    gs = [scenes[i] for i in group]
+    batch = eng.batcher.pack(gs)
+    maps, _ = eng._maps_for(batch, gs)
+    lp = eng.nplan.layers[0]
+    kmap = maps[lp.map_ref]
+    w = eng.params[lp.name]["w"]
+    x = batch.st.feats
+    tm = 16 if default_interpret() else 128
+    cfgs = {
+        "xla": df.DataflowConfig("implicit_gemm", n_splits=1),
+        "pallas": df.DataflowConfig("implicit_gemm", n_splits=1,
+                                    backend="pallas", tile_m=tm),
+        "pallas_worklist": df.DataflowConfig("implicit_gemm", n_splits=1,
+                                             backend="pallas", tile_m=tm,
+                                             worklist=True),
+    }
+    times = {}
+    for tag, cfg in cfgs.items():
+        plan = df.plan_for(kmap, cfg)   # eager: worklist needs concrete occ
+        call = lambda cfg=cfg, plan=plan: df.sparse_conv_forward(
+            x, w, kmap, cfg, plan=plan)
+        fn = call if cfg.worklist else jax.jit(call)
+        times[tag] = common.time_fn(fn, warmup=1, iters=reps)
+        common.emit(f"serving/{arch}/kernel_tier/{tag}", times[tag],
+                    f"effective_backend={cfg.effective_backend('fwd')}")
+    common.emit(
+        f"serving/{arch}/kernel_tier_ratio", 0.0,
+        f"pallas_vs_xla={times['xla'] / max(times['pallas'], 1e-9):.2f}x;"
+        f"worklist_vs_dense="
+        f"{times['pallas'] / max(times['pallas_worklist'], 1e-9):.2f}x;"
+        f"interpret={default_interpret()}")
+
+
 def _drive_deadline(eng: Engine, scenes, deadline_ms: float) -> dict:
     """Poll-driven overload: arrivals every 0.25×deadline, so the queue
     always holds work while a batch is in service and every flush is
@@ -312,6 +360,7 @@ def run(tiny: bool = False, devices: int = 0):
 
         _pipelined_leg(arch, scenes, bound, ladder, reps=17 if tiny else 7)
         _plan_compose_leg(arch, scenes, bound, ladder, reps=7 if tiny else 5)
+        _pallas_leg(arch, scenes, bound, ladder, reps=2 if tiny else 3)
 
         _saturating_leg(arch, scenes, bound, ladder)
 

@@ -83,6 +83,13 @@ class Autotuner:
                               candidate=str(cand)) as sp:
                     lat = self.measure(trial)
                     sp.set(latency_ms=lat * 1e3)
+                    # what actually ran: a "pallas" request silently runs
+                    # XLA for dataflows with no Pallas kernel (gather/
+                    # scatter) — the sweep log must record the effective
+                    # backend, not the requested one
+                    eff = getattr(cand, "effective_backend", None)
+                    if callable(eff):
+                        sp.set(effective_backend=eff("fwd"))
                 results.append((lat, cand))
                 self.log.append((g.name, cand, lat))
             lat, cand = min(results, key=lambda r: r[0])

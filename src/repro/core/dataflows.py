@@ -28,6 +28,7 @@ FP32 policy is bit-identical to the pre-policy behaviour.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -52,6 +53,9 @@ class DataflowConfig:
     tile_m: int = 128
     tile_n: int = 128
     backend: str = "xla"       # 'xla' | 'pallas'
+    worklist: bool = False     # pallas implicit GEMM: launch over the
+    #                            compacted occupied-(tile, δ) worklist
+    #                            instead of the dense grid (tile skipping)
 
     def __post_init__(self):
         assert self.dataflow in DATAFLOWS, self.dataflow
@@ -64,14 +68,37 @@ class DataflowConfig:
     def effective_splits(self) -> int:
         return max(1, self.n_splits)
 
+    def effective_backend(self, kernel: str = "fwd") -> str:
+        """The backend that *actually executes* this config for ``kernel``
+        (fwd/dgrad/wgrad) — not the one requested.  A ``backend='pallas'``
+        request silently runs the XLA path for dataflows that have no
+        Pallas kernel (gather_scatter fwd, every dgrad), and the tuner /
+        PlanRegistry must record what ran, not what was asked for."""
+        if self.backend != "pallas":
+            return "xla"
+        if kernel == "fwd":
+            return "pallas" if self.dataflow in ("implicit_gemm",
+                                                 "fetch_on_demand") else "xla"
+        if kernel == "dgrad":
+            return "xla"    # dgrad is always the XLA scan (see sparse_conv_dgrad)
+        if kernel == "wgrad":
+            return "pallas"
+        raise ValueError(f"unknown kernel {kernel!r}")
+
     def to_dict(self) -> dict:
         """JSON-safe dict (all fields are ints/strs).  Round-trips through
         ``from_dict`` — the serving engine's PlanRegistry persists tuned
-        assignments with this."""
-        return dataclasses.asdict(self)
+        assignments with this.  Carries a derived ``effective_backend``
+        stamp (what actually executes the forward) so persisted plans can't
+        claim pallas where xla ran; ``from_dict`` drops it."""
+        d = dataclasses.asdict(self)
+        d["effective_backend"] = self.effective_backend("fwd")
+        return d
 
     @staticmethod
     def from_dict(d: dict) -> "DataflowConfig":
+        d = dict(d)
+        d.pop("effective_backend", None)   # derived stamp, not a field
         unknown = set(d) - {f.name for f in dataclasses.fields(DataflowConfig)}
         if unknown:
             raise ValueError(f"unknown DataflowConfig fields: {sorted(unknown)}")
@@ -96,12 +123,30 @@ def default_serving_space(include_pallas: Optional[bool] = None) -> Tuple[Datafl
              DataflowConfig("fetch_on_demand"),
              DataflowConfig("implicit_gemm", n_splits=1)]
     if include_pallas:
-        space += [dataclasses.replace(cfg, backend="pallas") for cfg in space]
+        from repro.kernels.common import default_interpret
+        # Interpret mode unrolls the per-row DMA bodies at trace time, so
+        # CPU containers search small tiles (the math — and therefore the
+        # tuner's dataflow ranking — is tile-independent); real TPUs keep
+        # the MXU-shaped defaults.
+        tm, tn = (16, 128) if default_interpret() else (128, 128)
+        pallas = [dataclasses.replace(cfg, backend="pallas", tile_m=tm,
+                                      tile_n=tn) for cfg in space]
+        pallas.append(DataflowConfig("implicit_gemm", n_splits=1, tile_m=tm,
+                                     tile_n=tn, backend="pallas",
+                                     worklist=True))
+        space += pallas
     return tuple(space)
 
 
 def plan_for(kmap: KernelMap, cfg: DataflowConfig) -> SplitPlan:
-    return make_split_plan(kmap, cfg.effective_splits, sort=cfg.sorted)
+    tile_m = None
+    if cfg.backend == "pallas" and cfg.dataflow == "implicit_gemm" \
+            and cfg.worklist:
+        # fuse the per-(split, tile, δ) occupancy into the plan pass — the
+        # worklist kernel compacts its launch grid from it
+        tile_m = math.gcd(cfg.tile_m, kmap.capacity)
+    return make_split_plan(kmap, cfg.effective_splits, sort=cfg.sorted,
+                           tile_m=tile_m)
 
 
 def _gather_scatter_xla(x, w, kmap: KernelMap,
@@ -159,7 +204,8 @@ def sparse_conv_forward(x: jax.Array, w: jax.Array, kmap: KernelMap,
                 plan = plan_for(kmap, cfg)
             xc, wc = _pallas_operands(x, w, precision)
             return igemm_pallas_op(xc, wc, kmap, plan, tile_m=cfg.tile_m,
-                                   tile_n=cfg.tile_n).astype(out)
+                                   tile_n=cfg.tile_n,
+                                   worklist=cfg.worklist).astype(out)
         if cfg.dataflow == "fetch_on_demand":
             xc, wc = _pallas_operands(x, w, precision)
             return fod_pallas_op(xc, wc, kmap, tile_r=cfg.tile_m).astype(out)

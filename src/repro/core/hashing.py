@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -271,10 +272,107 @@ def searchsorted_keys(sorted_keys: jax.Array, q: jax.Array, words: int = 1,
     return lo
 
 
-def sort_keys(keys: jax.Array):
-    """Argsort packed keys.  One argsort for scalar keys; one chained stable
-    argsort per word (least-significant first) for multi-word keys.
-    Returns (order, sorted_keys)."""
+# ---------------------------------------------------------------------------
+# O(N) radix sort for bounded packed keys (ROADMAP item 1; Minuet-style —
+# the declared bit budget caps key entropy, so a bit-serial stable partition
+# replaces XLA's O(N log N) comparison argsort on the table-build hot path)
+# ---------------------------------------------------------------------------
+
+def radix_enabled() -> bool:
+    """Policy switch for the O(N·bits) radix sort tier.
+
+    Default: on for compiled TPU execution (comparison sorts lower to the
+    O(N·log²N) bitonic network there; the bit-partition passes beat it at
+    table scale) and OFF for CPU/interpret containers, where XLA runs the
+    ~30 sequential cumsum+scatter passes serially and a single comparison
+    argsort wins outright (bench: ``kmap/speedup/key_sort``).  Both paths
+    produce bit-identical permutations, so this flips cost, never layout.
+    ``REPRO_RADIX_SORT=1/0`` overrides for A/B runs.
+    """
+    env = os.environ.get("REPRO_RADIX_SORT")
+    if env is not None:
+        return env not in ("0", "false", "")
+    from repro.kernels.common import default_interpret
+    return not default_interpret()
+
+
+def radix_word_bits(spec: KeySpec) -> Optional[Tuple[int, ...]]:
+    """Per-word used bit counts, indexed by word number (0 = low word), for
+    a bounded packed spec — or ``None`` when the spec is raw / over budget
+    (no bit bound ⇒ no radix; comparison sort stays)."""
+    if spec.raw or not spec.fits():
+        return None
+    used = [0, 0]
+    for word, shift, width in spec.layout():
+        used[word] = max(used[word], shift + width)
+    return tuple(used[:spec.words])
+
+
+def _remap_radix_word(vals, nbits: int):
+    """Map one key word onto the dense radix domain ``[0, 2**(nbits+1))``:
+    ``MISS`` (-1) → 0, valid ``v ∈ [0, 2**nbits)`` → ``v+1``, ``PAD``
+    (int32 max) → ``2**nbits + 1``.  Order-preserving (MISS first, PAD
+    last — the signed-compare layout), so a radix sort of the remapped
+    word is bit-identical to a stable argsort of the original."""
+    return jnp.where(vals == _I32_MAX, jnp.int32((1 << nbits) + 1),
+                     vals + jnp.int32(1))
+
+
+def radix_argsort_bits(vals: jax.Array, nbits: int) -> jax.Array:
+    """Stable argsort of non-negative int32 ``vals < 2**nbits`` in
+    O(N·nbits): one stable binary partition (cumsum + scatter) per bit,
+    LSB first.  Bit-identical to ``jnp.argsort(vals, stable=True)``."""
+    n = vals.shape[0]
+    order = jnp.arange(n, dtype=jnp.int32)
+    if n == 0 or nbits <= 0:
+        return order
+
+    def body(b, carry):
+        r, o = carry
+        bit = (r >> b) & 1
+        zeros = jnp.cumsum(1 - bit)
+        pos = jnp.where(bit == 0, zeros - 1, zeros[-1] + jnp.cumsum(bit) - 1)
+        return (jnp.zeros_like(r).at[pos].set(r),
+                jnp.zeros_like(o).at[pos].set(o))
+
+    _, order = jax.lax.fori_loop(0, nbits, body, (vals, order))
+    return order
+
+
+def radix_argsort_padded(vals: jax.Array, nbits: int) -> jax.Array:
+    """Stable radix argsort of ``vals ∈ [0, 2**nbits) ∪ {MISS, PAD}`` —
+    remaps the sentinels onto the dense domain then bit-partitions.
+    Needs ``nbits ≤ 29`` so the remapped domain stays inside int32."""
+    return radix_argsort_bits(_remap_radix_word(vals, nbits), nbits + 1)
+
+
+def radix_argsort_keys(keys: jax.Array, spec: KeySpec) -> jax.Array:
+    """O(N·bits) stable radix argsort of packed keys (XLA twin of the
+    Pallas kernel in ``repro.kernels.radix_sort``).  Requires a bounded
+    spec; two-word keys chain lo-word then hi-word passes (stable LSD).
+    The permutation is bit-identical to ``sort_keys``'s argsort, pads and
+    MISS sentinels included."""
+    wb = radix_word_bits(spec)
+    if wb is None:
+        raise ValueError(f"radix sort needs a bounded spec, got {spec}")
+    if spec.words == 1:
+        return radix_argsort_bits(_remap_radix_word(keys, wb[0]), wb[0] + 1)
+    lo = _remap_radix_word(keys[:, 1], wb[0])
+    hi = _remap_radix_word(keys[:, 0], wb[1])
+    order = radix_argsort_bits(lo, wb[0] + 1)
+    return order[radix_argsort_bits(hi[order], wb[1] + 1)]
+
+
+def sort_keys(keys: jax.Array, spec: Optional[KeySpec] = None):
+    """Argsort packed keys.  With a bounded ``spec``, an O(N·bits) stable
+    radix sort keyed off the declared bit budget; otherwise one comparison
+    argsort for scalar keys / one chained stable argsort per word
+    (least-significant first) for multi-word keys.  The permutation is
+    identical either way.  Returns (order, sorted_keys)."""
+    if spec is not None and radix_word_bits(spec) is not None \
+            and radix_enabled():
+        order = radix_argsort_keys(keys, spec)
+        return order, keys[order]
     if keys.ndim == 1:
         order = jnp.argsort(keys, stable=True).astype(jnp.int32)
     else:
@@ -296,7 +394,7 @@ class CoordTable:
     def build(cls, coords: jax.Array, valid_mask: jax.Array,
               spec: KeySpec) -> "CoordTable":
         keys = pack_keys(coords, spec, valid=valid_mask)
-        order, sorted_keys = sort_keys(keys)
+        order, sorted_keys = sort_keys(keys, spec)
         return cls(spec, sorted_keys, order)
 
     @classmethod
@@ -376,7 +474,7 @@ class CoordTable:
         if not a:
             return CoordTable(spec, kept_keys, kept_order)
         ak = pack_keys(jnp.asarray(added_coords, jnp.int32), spec)
-        add_perm, add_sorted = sort_keys(ak)
+        add_perm, add_sorted = sort_keys(ak, spec)
         add_order = (n_keep + add_perm).astype(jnp.int32)
         # stable two-way merge: scatter both sorted runs at their final ranks
         pos_k = jnp.arange(n_keep, dtype=jnp.int32) + \
@@ -410,6 +508,45 @@ def np_pack_keys(coords: np.ndarray, spec: KeySpec) -> np.ndarray:
     if spec.words == 1:
         return lo.astype(np.int32)
     return np.stack([hi, lo], axis=-1).astype(np.int32)
+
+
+def np_radix_argsort_bits(vals: np.ndarray, nbits: int) -> np.ndarray:
+    """Numpy twin of ``radix_argsort_bits`` — stable O(N·nbits) bit-serial
+    partition, bit-identical to ``np.argsort(vals, kind="stable")`` for
+    non-negative ``vals < 2**nbits``."""
+    r = np.asarray(vals).astype(np.int64, copy=True)
+    n = r.shape[0]
+    order = np.arange(n, dtype=np.int32)
+    if n == 0 or nbits <= 0:
+        return order
+    for b in range(nbits):
+        bit = (r >> b) & 1
+        zeros = np.cumsum(bit == 0)
+        pos = np.where(bit == 0, zeros - 1, zeros[-1] + np.cumsum(bit) - 1)
+        nr = np.empty_like(r)
+        nr[pos] = r
+        no = np.empty_like(order)
+        no[pos] = order
+        r, order = nr, no
+    return order
+
+
+def np_radix_argsort_keys(keys: np.ndarray, spec: KeySpec) -> np.ndarray:
+    """Numpy twin of ``radix_argsort_keys`` (host-side scene tables)."""
+    wb = radix_word_bits(spec)
+    if wb is None:
+        raise ValueError(f"radix sort needs a bounded spec, got {spec}")
+    keys = np.asarray(keys)
+
+    def remap(v, ub):
+        v = v.astype(np.int64)
+        return np.where(v == _I32_MAX, (1 << ub) + 1, v + 1)
+
+    if spec.words == 1:
+        return np_radix_argsort_bits(remap(keys, wb[0]), wb[0] + 1)
+    order = np_radix_argsort_bits(remap(keys[:, 1], wb[0]), wb[0] + 1)
+    hi = remap(keys[:, 0], wb[1])
+    return order[np_radix_argsort_bits(hi[order], wb[1] + 1)]
 
 
 def _np_cmp_keys(keys: np.ndarray, words: int) -> Optional[np.ndarray]:
@@ -467,7 +604,10 @@ def np_delta_merge(spec: KeySpec, keys: np.ndarray, order: np.ndarray,
                                  n_keep + np.arange(a, dtype=np.int32)])
         perm = lex_argsort_np(merged)
         return merged[perm], morder[perm]
-    perm = np.argsort(ak_cmp, kind="stable").astype(np.int32)
+    if radix_word_bits(spec) is not None and radix_enabled():
+        perm = np_radix_argsort_keys(ak, spec)   # bounded keys: O(N) radix
+    else:
+        perm = np.argsort(ak_cmp, kind="stable").astype(np.int32)
     ak, ak_cmp = ak[perm], ak_cmp[perm]
     add_order = (n_keep + perm).astype(np.int32)
     kept_cmp = _np_cmp_keys(kept_keys, spec.words)

@@ -286,7 +286,7 @@ def _unique_from_keys(table: CoordTable, out_stride: int, capacity: int):
                            jnp.stack(list(masks)), _I32_MAX)
         same = lambda ks: hashing.keys_equal(ks[1:], ks[:-1], w)
         pad_shape = (capacity + 1, w)
-    order, ks = hashing.sort_keys(masked)
+    order, ks = hashing.sort_keys(masked, spec)
     first_valid = row_valid[order]
     same_as_prev = same(ks)
     is_first = jnp.concatenate([jnp.ones((1,), bool), ~same_as_prev]) & first_valid
@@ -851,7 +851,10 @@ def make_split_plan(kmap: KernelMap, n_splits: int, sort: bool = True,
             bm = _bitmask(hit[:, a:b])
         # valid rows first (sorted by bitmask), padding last
         key = jnp.where(valid, bm, jnp.iinfo(jnp.int32).max)
-        orders.append(jnp.argsort(key).astype(jnp.int32))
+        if kd <= 31 and (b - a) <= 29 and hashing.radix_enabled():
+            orders.append(hashing.radix_argsort_padded(key, b - a))
+        else:
+            orders.append(jnp.argsort(key).astype(jnp.int32))
     order = jnp.stack(orders)
     inv = jax.vmap(lambda o: jnp.argsort(o).astype(jnp.int32))(order)
 
@@ -886,7 +889,10 @@ def _scene_split_keys(entry: SceneEntry, ref: tuple,
                   & np.int32((1 << (b - a)) - 1))
         else:
             bm = _np_bitmask(sm["m_out"][:n_o, a:b] >= 0)
-        loc = np.argsort(bm, kind="stable").astype(np.int32)
+        if kd <= 31 and (b - a) <= 29 and hashing.radix_enabled():
+            loc = hashing.np_radix_argsort_bits(bm, b - a)
+        else:
+            loc = np.argsort(bm, kind="stable").astype(np.int32)
         runs.append((bm[loc], loc))
     entry.splits[ck] = runs
     return runs

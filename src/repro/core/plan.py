@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import dataflows as df
 from repro.core import generator
 from repro.core import precision as prec
@@ -428,12 +429,21 @@ class NetworkPlan:
                            for lp in self.layers)
         return dataclasses.replace(self, layers=layers)
 
-    def resolve_tiles(self, maps: dict,
-                      threshold_macs: float = 5e8) -> "NetworkPlan":
+    def resolve_tiles(self, maps: dict, threshold_macs: float = 5e8,
+                      measure: Optional[Callable[["NetworkPlan"], float]] = None,
+                      candidates: Optional[Sequence[tuple]] = None
+                      ) -> "NetworkPlan":
         """Adaptive tiling (paper §6.2): once real kernel maps exist, pick
-        each implicit-GEMM layer's (tile_m, tile_n) by its effective MACs
-        via ``generator.adaptive_tiles``.  Tile sizes only matter to the
-        Pallas backend's launch geometry — the math is unchanged."""
+        each implicit-GEMM layer's (tile_m, tile_n).  Tile sizes only matter
+        to the Pallas backend's launch geometry — the math is unchanged.
+
+        With ``measure=None`` (default) tiles come from the MAC heuristic
+        (``generator.adaptive_tiles``).  With a ``measure(candidate_plan) →
+        seconds`` callable, the Pallas implicit-GEMM *groups* are instead
+        retiled by greedy measurement — each group tries every ``candidates``
+        pair (default: the generator's tile menu) under end-to-end latency,
+        mirroring the dataflow tuner's loop — so the kernel tier is a
+        searched axis, not a guessed one."""
         def retile(cfg: df.DataflowConfig, kmap, cin, cout):
             if cfg.dataflow != "implicit_gemm":
                 return cfg
@@ -450,7 +460,45 @@ class NetworkPlan:
                 dgrad=retile(lp.dataflow.dgrad, kmap, cout, cin),
                 wgrad=retile(lp.dataflow.wgrad, kmap, cin, cout))
             layers.append(dataclasses.replace(lp, dataflow=cfg3))
-        return dataclasses.replace(self, layers=tuple(layers))
+        plan = dataclasses.replace(self, layers=tuple(layers))
+        if measure is None:
+            return plan
+
+        # -------- measured mode: greedy per-group tile search (pallas only)
+        cands = tuple(candidates if candidates is not None
+                      else dict.fromkeys((generator.SMALL_TILES,
+                                          generator.LARGE_TILES, (128, 128))))
+
+        def group_tiles(p: "NetworkPlan", sig: tuple, tm: int,
+                        tn: int) -> "NetworkPlan":
+            def retile3(cfg: df.DataflowConfig) -> df.DataflowConfig:
+                if cfg.dataflow != "implicit_gemm":
+                    return cfg
+                return dataclasses.replace(cfg, tile_m=tm, tile_n=tn)
+            new = tuple(
+                dataclasses.replace(lp, dataflow=TrainDataflowConfig(
+                    fwd=retile3(lp.dataflow.fwd),
+                    dgrad=retile3(lp.dataflow.dgrad),
+                    wgrad=retile3(lp.dataflow.wgrad)))
+                if lp.sig == sig else lp for lp in p.layers)
+            return dataclasses.replace(p, layers=new)
+
+        for g in plan.groups():
+            rep = plan.layer(g.layer_names[0])
+            fwd = rep.dataflow.fwd
+            if not (fwd.backend == "pallas" and fwd.dataflow == "implicit_gemm"):
+                continue
+            results = []
+            for tm, tn in cands:
+                trial = group_tiles(plan, rep.sig, tm, tn)
+                with obs.span("resolve_tiles_candidate", group=g.name,
+                              tiles=f"{tm}x{tn}") as sp:
+                    lat = measure(trial)
+                    sp.set(latency_ms=lat * 1e3)
+                results.append((lat, (tm, tn)))
+            _, (tm, tn) = min(results, key=lambda r: r[0])
+            plan = group_tiles(plan, rep.sig, tm, tn)
+        return plan
 
     # ----------------------------------------------------------- execution
     def cast_params(self, params: dict) -> dict:
@@ -605,13 +653,22 @@ class PlanTuner:
     the workload executed under the candidate plan — never per-kernel time
     (paper Tables 3 vs 4).  Inference binding: all three kernels share the
     group's config (``bind_all``).
+
+    With ``maps`` given, the dataflow search is followed by a *measured*
+    tile resolution pass (``NetworkPlan.resolve_tiles(measure=...)``) over
+    the Pallas implicit-GEMM groups of the winning assignment — the kernel
+    generator's tile axis joins the search instead of staying a heuristic.
     """
 
     def __init__(self, nplan: NetworkPlan, space: Sequence[df.DataflowConfig],
-                 measure: Callable[[NetworkPlan], float]):
+                 measure: Callable[[NetworkPlan], float],
+                 maps: Optional[dict] = None,
+                 tile_candidates: Optional[Sequence[tuple]] = None):
         self.nplan = nplan
         self.space = list(space)
         self.measure = measure
+        self.maps = maps
+        self.tile_candidates = tile_candidates
         self.groups = nplan.groups()
         self.sig_of = {g.name: nplan.layer(g.layer_names[0]).sig
                        for g in self.groups}
@@ -627,7 +684,11 @@ class PlanTuner:
                           lambda assign: self.measure(self._plan_for(assign)))
         best = tuner.tune()
         self.log = tuner.log
-        return self._plan_for(best)
+        tuned = self._plan_for(best)
+        if self.maps is not None:
+            tuned = tuned.resolve_tiles(self.maps, measure=self.measure,
+                                        candidates=self.tile_candidates)
+        return tuned
 
 
 class TrainingPlanTuner:

@@ -25,12 +25,42 @@ def default_interpret() -> bool:
 
 
 def pallas_supported() -> bool:
-    """True when the installed jax can launch this repo's Pallas kernels —
-    they pass ``pltpu.CompilerParams``, absent on older jax (the same probe
-    tests/conftest.py gates the kernel suites behind).  The serving tuner
-    uses this to decide whether the pallas backend axis is searchable."""
+    """True when the installed jax can launch this repo's Pallas kernels.
+
+    The kernels need a TPU compiler-params class for ``pl.pallas_call``;
+    current jax spells it ``pltpu.CompilerParams``, 0.4.x spells it
+    ``pltpu.TPUCompilerParams``.  :func:`tpu_compiler_params` papers over
+    the rename, so either spelling makes the tier launchable (interpret
+    mode off-TPU).  tests/conftest.py gates the kernel suites behind the
+    same probe and the serving tuner uses it to decide whether the pallas
+    backend axis is searchable."""
     try:
         from jax.experimental.pallas import tpu as pltpu  # noqa: F401
     except Exception:
         return False
-    return hasattr(pltpu, "CompilerParams")
+    return hasattr(pltpu, "CompilerParams") or hasattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(*, dimension_semantics=None, interpret: bool = False):
+    """Build TPU compiler params across the CompilerParams rename.
+
+    Returns an instance of whichever class this jax provides, or ``None``
+    when the kernel runs in interpret mode (the interpreter rejects /
+    ignores Mosaic compiler params) or when neither spelling exists.
+    Pass the result straight to ``pl.pallas_call(compiler_params=...)`` —
+    ``None`` is the documented default there.
+    """
+    if interpret:
+        return None
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception:
+        return None
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    kwargs = {}
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return cls(**kwargs)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 
 def _kernel(wsin_ref, wsout_ref, x_ref, w_ref, acc_in_ref, o_ref,
             scratch, obuf, ybuf, sems, osems, *, tile_r: int, cin: int):
@@ -123,6 +125,7 @@ def fetch_on_demand_pallas(ws_in: jax.Array, ws_out: jax.Array, x: jax.Array,
         ],
         input_output_aliases={4: 0},
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")),
+        compiler_params=common.tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+            interpret=interpret),
     )(ws_in, ws_out, x, w, out0)

@@ -17,6 +17,17 @@ loads go through one level of indirection (the kernel map).  TPU adaptation
 
 Grid: (m_tiles, n_tiles, KD_split) with δ innermost; the f32 accumulator
 lives in VMEM across δ steps and is written once at the last δ.
+
+``implicit_gemm_worklist_pallas`` is the tile-*skipping* variant (Spira's
+structure-exploiting scheduling): instead of the dense (m_tiles, KD) product
+gated per step by ``@pl.when``, the grid runs over a host-compacted worklist
+of the occupied (m_tile, δ) pairs only — empty tiles are never scheduled.
+The worklist is sorted by m_tile so all δ entries of one output tile are
+consecutive grid steps; Pallas keeps the revisited output block (and the
+VMEM accumulator) resident across them, and per-entry flags mark the
+first/last entry of each tile (zero / flush points).  Scalar-prefetch
+(``pltpu.PrefetchScalarGridSpec``) feeds the worklist to the index maps, so
+the weight block and output block are data-dependent on the worklist entry.
 """
 from __future__ import annotations
 
@@ -27,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.common import cdiv
 
 
@@ -105,6 +117,112 @@ def implicit_gemm_pallas(midx: jax.Array, occ: jax.Array, x: jax.Array,
             pltpu.SemaphoreType.DMA((tile_m,)),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=common.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            interpret=interpret),
     )(midx, occ, x, w)
+
+
+# ------------------------------------------------------- tile skipping
+# Worklist entry flags (bit field; 0 = padding entry, never computes)
+WL_FIRST = 1   # first entry of its output tile: zero the accumulator
+WL_LAST = 2    # last entry of its output tile: flush acc → output block
+WL_VALID = 4   # real entry: gather + accumulate (middle entries are
+#                VALID-only; pads are 0)
+
+
+def _wl_kernel(wl_tile_ref, wl_delta_ref, wl_flags_ref, midx_ref, x_ref,
+               w_ref, o_ref, scratch, acc, sems, *, tile_m: int, cin: int):
+    del wl_tile_ref, wl_delta_ref   # consumed by the index maps
+    i = pl.program_id(1)
+    fl = wl_flags_ref[i]
+
+    @pl.when((fl & WL_FIRST) != 0)
+    def _zero():
+        acc[...] = jnp.zeros_like(acc)
+
+    @pl.when((fl & WL_VALID) != 0)
+    def _compute():
+        for r in range(tile_m):
+            idx = midx_ref[0, r]
+
+            @pl.when(idx >= 0)
+            def _start():
+                pltpu.make_async_copy(x_ref.at[idx], scratch.at[r], sems.at[r]).start()
+
+            @pl.when(idx < 0)
+            def _zero_row():
+                scratch[r, :] = jnp.zeros((cin,), scratch.dtype)
+
+        for r in range(tile_m):
+            idx = midx_ref[0, r]
+
+            @pl.when(idx >= 0)
+            def _wait():
+                pltpu.make_async_copy(x_ref.at[idx], scratch.at[r], sems.at[r]).wait()
+
+        acc[...] += jnp.dot(scratch[...], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when((fl & WL_LAST) != 0)
+    def _flush():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_tiles_m", "tile_m", "tile_n",
+                                    "interpret"))
+def implicit_gemm_worklist_pallas(wl_tile: jax.Array, wl_delta: jax.Array,
+                                  wl_flags: jax.Array, wl_midx: jax.Array,
+                                  x: jax.Array, w: jax.Array, *,
+                                  n_tiles_m: int, tile_m: int = 128,
+                                  tile_n: int = 128,
+                                  interpret: bool = True) -> jax.Array:
+    """One split of tile-skipping implicit GEMM over a compacted worklist.
+
+    wl_tile:  (W,) int32 — output m-tile of each entry, sorted ascending
+              (all entries of one tile consecutive); pads repeat the last
+              real tile so no fresh output block is visited.
+    wl_delta: (W,) int32 — δ offset (into this split's weight slice).
+    wl_flags: (W,) int32 — WL_VALID/WL_FIRST/WL_LAST bit field; 0 ⇒ padding
+              entry (no compute, no write).
+    wl_midx:  (W, tile_m) int32 — pre-gathered kernel-map rows of each
+              entry (``midx[tile·tile_m:(tile+1)·tile_m, δ]``).
+    x:        (N_in, Cin); w: (KD_split, Cin, Cout).
+    Returns (n_tiles_m · tile_m, Cout) partials; tiles with NO worklist
+    entry hold uninitialized garbage — callers must mask them to zero
+    (the wrapper does).
+    """
+    wn, cin = wl_midx.shape[0], x.shape[1]
+    cout = w.shape[-1]
+    assert cout % tile_n == 0, f"Cout {cout} must be a multiple of tile_n {tile_n}"
+    grid = (cout // tile_n, wn)   # worklist innermost: same-tile steps stay
+    #                               resident in the output block / acc
+
+    kernel = functools.partial(_wl_kernel, tile_m=tile_m, cin=cin)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_m), lambda j, i, wt, wd, wf: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, cin, tile_n), lambda j, i, wt, wd, wf: (wd[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n),
+                               lambda j, i, wt, wd, wf: (wt[i], j)),
+        scratch_shapes=[
+            pltpu.VMEM((tile_m, cin), x.dtype),
+            pltpu.VMEM((tile_m, tile_n), jnp.float32),
+            pltpu.SemaphoreType.DMA((tile_m,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles_m * tile_m, cout), x.dtype),
+        interpret=interpret,
+        compiler_params=common.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+            interpret=interpret),
+    )(wl_tile, wl_delta, wl_flags, wl_midx, x, w)

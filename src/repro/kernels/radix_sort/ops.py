@@ -1,0 +1,36 @@
+"""Spec-aware wrapper: packed keys → radix argsort via the Pallas kernel.
+
+Mirrors ``repro.core.hashing.radix_argsort_keys`` (the XLA twin) exactly:
+sentinel remap onto the dense domain, lo-word passes then hi-word passes
+for two-word keys (stable LSD).  The permutation is bit-identical to the
+stable comparison argsort the table build historically used — pads
+(``PAD`` → int32 max, sorts last) and ``MISS`` (-1, sorts first)
+included.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.hashing import KeySpec, _remap_radix_word, radix_word_bits
+from repro.kernels.common import default_interpret
+from repro.kernels.radix_sort.radix_sort import radix_argsort_bits_pallas
+
+
+def radix_argsort(keys: jax.Array, spec: KeySpec,
+                  *, interpret: bool | None = None) -> jax.Array:
+    """Argsort permutation of packed keys ((N,) or (N, 2) int32) under a
+    bounded spec.  Returns (N,) int32."""
+    if interpret is None:
+        interpret = default_interpret()
+    wb = radix_word_bits(spec)
+    if wb is None:
+        raise ValueError(f"radix sort needs a bounded spec, got {spec}")
+    if spec.words == 1:
+        return radix_argsort_bits_pallas(
+            _remap_radix_word(keys, wb[0]), nbits=wb[0] + 1,
+            interpret=interpret)
+    lo = _remap_radix_word(keys[:, 1], wb[0])
+    hi = _remap_radix_word(keys[:, 0], wb[1])
+    order = radix_argsort_bits_pallas(lo, nbits=wb[0] + 1, interpret=interpret)
+    return order[radix_argsort_bits_pallas(hi[order], nbits=wb[1] + 1,
+                                           interpret=interpret)]

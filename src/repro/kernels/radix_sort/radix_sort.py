@@ -1,0 +1,64 @@
+"""O(N) radix argsort — Pallas kernel for bounded packed keys.
+
+Minuet's observation, lifted to the kernel tier: packed coordinate keys
+carry a *declared* bit budget (``KeySpec``), so the table-build sort never
+needs a comparison argsort — ``nbits`` stable binary partitions reproduce
+``jnp.argsort(stable=True)`` exactly, in O(N·nbits) work with O(N) memory
+traffic per pass.
+
+One ``pallas_call``, no grid: the key column lives in VMEM and a
+``fori_loop`` runs one stable bit partition per iteration (prefix-sum the
+zero/one flags, scatter rows to their partition rank).  The value-level
+scatter (`.at[pos].set`) is the interpret-mode contract this repo asserts
+in tier-1; on real TPUs the partition would become an SMEM-offset DMA
+shuffle — noted as a follow-up in ROADMAP.md.  The XLA twin is
+``repro.core.hashing.radix_argsort_bits`` (bit-identical, same pass
+structure); the numpy twin serves the engine's host-side scene tables.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def _kernel(vals_ref, perm_ref, *, nbits: int):
+    r = vals_ref[...]                      # (N, 1) int32, non-negative
+    o = jax.lax.broadcasted_iota(jnp.int32, r.shape, 0)
+
+    def body(b, carry):
+        r, o = carry
+        bit = (r >> b) & 1
+        zeros = jnp.cumsum(1 - bit, axis=0)
+        n0 = zeros[-1, 0]
+        pos = jnp.where(bit == 0, zeros - 1, n0 + jnp.cumsum(bit, axis=0) - 1)
+        idx = pos[:, 0]
+        return (jnp.zeros_like(r).at[idx].set(r),
+                jnp.zeros_like(o).at[idx].set(o))
+
+    _, o = jax.lax.fori_loop(0, nbits, body, (r, o))
+    perm_ref[...] = o
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "interpret"))
+def radix_argsort_bits_pallas(vals: jax.Array, *, nbits: int,
+                              interpret: bool = True) -> jax.Array:
+    """Stable argsort permutation of non-negative int32 ``vals < 2**nbits``.
+
+    vals: (N,) int32.  Returns (N,) int32 — bit-identical to
+    ``jnp.argsort(vals, stable=True)``.
+    """
+    n = vals.shape[0]
+    if n == 0 or nbits <= 0:
+        return jnp.arange(n, dtype=jnp.int32)
+    perm = pl.pallas_call(
+        functools.partial(_kernel, nbits=nbits),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+        compiler_params=common.tpu_compiler_params(interpret=interpret),
+    )(vals[:, None])
+    return perm[:, 0]

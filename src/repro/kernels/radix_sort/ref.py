@@ -1,0 +1,15 @@
+"""Oracle for the radix argsort: the stable comparison argsort whose
+permutation (layout incl. the PAD tail) defines the table contract."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import lex_argsort
+
+
+def radix_argsort_ref(keys: jax.Array) -> jax.Array:
+    """Stable argsort permutation of packed keys ((N,) or (N, W) MSB-first)."""
+    if keys.ndim == 1:
+        return jnp.argsort(keys, stable=True).astype(jnp.int32)
+    return lex_argsort(keys)

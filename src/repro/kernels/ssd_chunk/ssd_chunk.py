@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 
 def _kernel(a_ref, x_ref, b_ref, c_ref, y_ref, hfin_ref, state, *, chunk: int):
     ci = pl.program_id(1)
@@ -91,6 +93,7 @@ def ssd_chunk_pallas(a: jax.Array, xdt: jax.Array, b: jax.Array, c: jax.Array,
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=common.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+            interpret=interpret),
     )(a, xdt, b, c)

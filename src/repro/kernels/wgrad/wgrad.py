@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 
 def _kernel(wsin_ref, wsout_ref, x_ref, dy_ref, o_ref, xs, ys, acc,
             sems_x, sems_y, *, tile_r: int, cin: int, cout: int):
@@ -100,6 +102,7 @@ def wgrad_pallas(ws_in: jax.Array, ws_out: jax.Array, x: jax.Array,
             pltpu.SemaphoreType.DMA((tile_r,)),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=common.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+            interpret=interpret),
     )(ws_in, ws_out, x, dy)

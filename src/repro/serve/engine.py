@@ -1015,7 +1015,8 @@ class Engine:
     # ------------------------------------------------------------- autotune
     def tune(self, sample_scenes: Sequence[Scene],
              space: Optional[Sequence[df.DataflowConfig]] = None,
-             iters: int = 2, save: bool = True) -> Dict[tuple, TrainDataflowConfig]:
+             iters: int = 2, save: bool = True,
+             resolve_tiles: bool = False) -> Dict[tuple, TrainDataflowConfig]:
         """Run the group-based Sparse Autotuner on a representative packed
         batch and persist the winning *NetworkPlan* to the PlanRegistry.
 
@@ -1024,6 +1025,12 @@ class Engine:
         dropped so the tuned plan takes effect on the next flush.  Returns
         the per-group assignment for inspection; the serialized plan (and
         its v1-compatible assignment block) lands in the registry.
+
+        ``resolve_tiles=True`` adds a measured tile-resolution pass over the
+        winner's Pallas implicit-GEMM groups (each candidate (tile_m,
+        tile_n) timed end-to-end like the dataflow sweep).  Off by default:
+        it multiplies tuning wall-clock by the tile-menu size and only
+        matters when the winning assignment uses the Pallas tier.
         """
         space = list(space or df.default_serving_space())
         sample_scenes = list(sample_scenes)
@@ -1039,7 +1046,8 @@ class Engine:
             return timeit_fn(lambda: jax.block_until_ready(
                 fn(self.params, batch.st, maps)), warmup=1, iters=iters)
 
-        tuned = PlanTuner(self.nplan, space, measure).tune()
+        tuned = PlanTuner(self.nplan, space, measure,
+                          maps=maps if resolve_tiles else None).tune()
         self.nplan = tuned
         self.assignment = tuned.assignment()
         self.plans.set(self.plan_key, self.assignment, network=tuned)

@@ -23,34 +23,37 @@ except ModuleNotFoundError:  # pragma: no cover - exercised in minimal envs
 # need it are skip-marked with the probe's reason so the suite is green on
 # the pinned runtime and a *new* failure is never hidden inside known-red.
 
-def _probe_pltpu_compiler_params() -> bool:
-    """jax.experimental.pallas.tpu.CompilerParams — the Pallas-TPU kernels
-    pass it to pl.pallas_call; jax 0.4.37 only has the old TPUCompilerParams
-    spelling."""
+def _probe_pallas_supported() -> bool:
+    """repro.kernels.common.pallas_supported() — true when either spelling
+    of the TPU compiler-params class (``pltpu.CompilerParams`` on current
+    jax, ``pltpu.TPUCompilerParams`` on 0.4.x) exists; the kernels route
+    through ``common.tpu_compiler_params`` which papers over the rename, so
+    on jax 0.4.37 the kernel suites now really run (interpret mode)."""
     try:
-        from jax.experimental.pallas import tpu as pltpu
+        from repro.kernels.common import pallas_supported
     except Exception:  # pragma: no cover - pallas missing entirely
         return False
-    return hasattr(pltpu, "CompilerParams")
+    return pallas_supported()
 
 
-HAS_PLTPU_COMPILER_PARAMS = _probe_pltpu_compiler_params()
+HAS_PALLAS = _probe_pallas_supported()
 # The other 0.4.37 gaps this PR met — jax.sharding.AxisType and
 # jax.lax.axis_size — need no skip probes: launch/mesh.py and
 # train/compression.py carry runtime fallbacks, so those tests really pass.
 
-#: test files whose every case drives a Pallas-TPU kernel through
-#: pltpu.CompilerParams (50 known env failures on jax 0.4.37)
+#: test files whose every case drives a Pallas kernel through
+#: common.tpu_compiler_params (run in interpret mode off-TPU)
 _PALLAS_KERNEL_FILES = frozenset(
-    ["test_kernels.py", "test_ssd_kernel.py", "test_wgrad_kernel.py"])
+    ["test_kernels.py", "test_ssd_kernel.py", "test_wgrad_kernel.py",
+     "test_radix_kernel.py"])
 
 _PALLAS_SKIP = pytest.mark.skip(
-    reason="pallas kernels use pltpu.CompilerParams, absent in this jax "
-           "(CI pins 0.4.37; kernels target the current pallas API)")
+    reason="this jax has neither pltpu.CompilerParams nor the old "
+           "TPUCompilerParams spelling — pallas tier unlaunchable")
 
 
 def pytest_collection_modifyitems(config, items):
-    if HAS_PLTPU_COMPILER_PARAMS:
+    if HAS_PALLAS:
         return
     for item in items:
         if os.path.basename(str(item.fspath)) in _PALLAS_KERNEL_FILES:

@@ -383,3 +383,70 @@ def test_bitmask_composite_path_above_31():
     assert kmap.volume == 64
     assert kmap.bitmask.dtype == jnp.int32
     assert_kmap_matches_ref(kmap, np_build_kmap(stx, 4, 2))
+
+
+# ---------------------------------------------------------------------------
+# O(N) radix sort for bounded packed keys (vs the stable comparison argsort)
+# ---------------------------------------------------------------------------
+
+@property_test(
+    "seed,extent,lo,batch,spec_kind",
+    cases=[(0, 8, 0, 1, "one"), (1, 16, -8, 2, "one"), (2, 6, -5, 3, "one"),
+           (3, 20, 0, 2, "two"), (4, 10, -12, 4, "two"), (5, 3, -2, 1, "two")],
+    strategies=lambda st: dict(seed=st.integers(0, 10_000),
+                               extent=st.integers(3, 20),
+                               lo=st.integers(-12, 0),
+                               batch=st.integers(1, 4),
+                               spec_kind=st.sampled_from(["one", "two"])),
+    max_examples=16)
+def test_property_radix_argsort_is_stable_argsort(seed, extent, lo, batch,
+                                                  spec_kind):
+    """The O(N·bits) radix argsort (XLA twin and numpy twin) is
+    *bit*-identical to the stable comparison argsort on bounded packed
+    keys: same permutation including tie order, negative coordinates, and
+    the PAD tail."""
+    stx = random_tensor(seed, n=80, cap=96, extent=extent, lo=lo, batch=batch)
+    spec = _spec_of_kind(spec_kind, batch, lo, extent)
+    keys = hashing.pack_keys(stx.coords, spec, valid=stx.valid_mask)
+    kn = np.array(keys)
+    kn[70:80] = kn[0:10]     # duplicates: stability must be exercised
+    if kn.ndim == 1:
+        ref = np.argsort(kn, kind="stable").astype(np.int32)
+    else:
+        ref = hashing.lex_argsort_np(kn)
+    np.testing.assert_array_equal(
+        np.asarray(hashing.radix_argsort_keys(jnp.asarray(kn), spec)), ref)
+    np.testing.assert_array_equal(hashing.np_radix_argsort_keys(kn, spec), ref)
+    # the sort_keys dispatcher picks radix for bounded specs — identical
+    # layout to the comparison path it replaces
+    order, sk = hashing.sort_keys(jnp.asarray(kn), spec)
+    np.testing.assert_array_equal(np.asarray(order), ref)
+    np.testing.assert_array_equal(np.asarray(sk), kn[ref])
+
+
+def test_radix_argsort_padded_matches_argsort_with_sentinels():
+    """Bitmask sort keys carry MISS (-1) and PAD (int32 max) sentinels; the
+    padded radix path must keep the signed-compare layout (MISS first, PAD
+    last, ties stable)."""
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1 << 12, 300).astype(np.int32)
+    vals[50:80] = np.iinfo(np.int32).max    # PAD
+    vals[100:110] = vals[0:10]              # duplicates
+    vals[200:205] = -1                      # MISS
+    got = np.asarray(hashing.radix_argsort_padded(jnp.asarray(vals), 12))
+    np.testing.assert_array_equal(got, np.argsort(vals, kind="stable"))
+    # numpy twin of the same padded path
+    np.testing.assert_array_equal(
+        hashing.np_radix_argsort_bits(
+            np.asarray(hashing._remap_radix_word(jnp.asarray(vals), 12)), 13),
+        np.argsort(vals, kind="stable"))
+
+
+def test_sort_keys_raw_spec_falls_back_to_comparison_sort():
+    spec = hashing.key_spec_for(3)          # unknown bounds → raw columns
+    assert hashing.radix_word_bits(spec) is None
+    rng = np.random.default_rng(1)
+    keys = jnp.asarray(rng.integers(-50, 50, (64, 4)).astype(np.int32))
+    order, _ = hashing.sort_keys(keys, spec)
+    np.testing.assert_array_equal(np.asarray(order),
+                                  hashing.lex_argsort_np(np.asarray(keys)))

@@ -373,3 +373,96 @@ def test_engine_prefers_persisted_network_plan(tmp_path):
     eng = Engine("centerpoint_waymo", ladder=BucketLadder((256,), max_batch=2),
                  spatial_bound=64, plans=path)
     assert eng.nplan == nplan
+
+
+def test_measured_resolve_tiles_searches_pallas_groups():
+    """With a measure callable, resolve_tiles runs a greedy per-group tile
+    search over the Pallas implicit-GEMM groups (end-to-end latency, like
+    the dataflow tuner) instead of trusting the MAC heuristic; XLA groups
+    keep the heuristic tiles (tile choice can't matter to them)."""
+    stx = random_tensor(0, n=150, cap=256, channels=5, extent=16)
+    nplan = centerpoint.network_plan(CP_CFG)
+    maps = nplan.build_maps(stx)
+    sigs = sorted({lp.sig for lp in nplan.layers}, key=str)
+    pallas_sig, xla_sig = sigs[0], sigs[1]
+    nplan = nplan.with_assignment({
+        pallas_sig: TrainDataflowConfig.bind_all(
+            df.DataflowConfig("implicit_gemm", n_splits=1, backend="pallas")),
+        xla_sig: TrainDataflowConfig.bind_all(
+            df.DataflowConfig("implicit_gemm", n_splits=1))})
+
+    calls = []
+
+    def measure(p: NetworkPlan) -> float:
+        fwd = p.assignment()[pallas_sig].fwd
+        calls.append((fwd.tile_m, fwd.tile_n))
+        return 1.0 + 0.01 * abs(fwd.tile_m - 64) + 0.01 * abs(fwd.tile_n - 128)
+
+    resolved = nplan.resolve_tiles(maps, measure=measure)
+    got = resolved.assignment()[pallas_sig].fwd
+    assert (got.tile_m, got.tile_n) == (64, 128)
+    # the search actually tried the generator's tile menu
+    assert set(calls) >= {generator.SMALL_TILES, generator.LARGE_TILES}
+    # the xla group took the MAC heuristic, not a measured pick
+    heur = nplan.resolve_tiles(maps).assignment()[xla_sig].fwd
+    assert resolved.assignment()[xla_sig].fwd == heur
+    # no measure → pure heuristic, unchanged behavior
+    assert nplan.resolve_tiles(maps).assignment()[pallas_sig].fwd.tile_m in (
+        generator.SMALL_TILES[0], generator.LARGE_TILES[0])
+
+
+def test_plan_tuner_measures_pallas_axis_and_resolves_tiles():
+    """End-to-end: PlanTuner with maps searches the dataflow×backend space
+    (including the worklist variant) and follows with measured tile
+    resolution on the winning Pallas groups."""
+    stx = random_tensor(0, n=150, cap=256, channels=5, extent=16)
+    nplan = centerpoint.network_plan(CP_CFG)
+    maps = nplan.build_maps(stx)
+    space = [df.DataflowConfig("gather_scatter"),
+             df.DataflowConfig("implicit_gemm", n_splits=1, backend="pallas",
+                               worklist=True)]
+
+    def measure(p: NetworkPlan) -> float:
+        t = 1.0
+        for _, c3 in p.assignment().items():
+            fwd = c3.fwd
+            t += 1.0 if fwd.effective_backend("fwd") == "pallas" else 5.0
+            if fwd.dataflow == "implicit_gemm":
+                t += 0.01 * abs(fwd.tile_m - 64)
+        return t
+
+    tuned = PlanTuner(nplan, space, measure, maps=maps).tune()
+    for _, c3 in tuned.assignment().items():
+        assert c3.fwd.backend == "pallas" and c3.fwd.worklist
+        assert c3.fwd.effective_backend("fwd") == "pallas"
+        assert c3.fwd.tile_m == 64
+    # worklist configs demand pre-built split plans on the executor side
+    assert tuned.split_plan_specs()
+
+
+def test_tuned_pallas_plan_roundtrips_registry(tmp_path):
+    """A tuned plan carrying pallas assignments (worklist variant included)
+    and measured tiles survives PlanRegistry JSON round-trip bit-exactly —
+    including the derived effective_backend stamp in the serialized form."""
+    stx = random_tensor(0, n=150, cap=256, channels=5, extent=16)
+    nplan = centerpoint.network_plan(CP_CFG)
+    maps = nplan.build_maps(stx)
+    space = [df.DataflowConfig("implicit_gemm", n_splits=2, backend="pallas",
+                               worklist=True),
+             df.DataflowConfig("gather_scatter", backend="pallas")]
+
+    def measure(p: NetworkPlan) -> float:
+        return sum(1.0 if c3.fwd.dataflow == "implicit_gemm" else 2.0
+                   for c3 in p.assignment().values())
+
+    tuned = PlanTuner(nplan, space, measure, maps=maps).tune()
+    reg = PlanRegistry()
+    reg.set("centerpoint_waymo", tuned.assignment(), network=tuned)
+    path = reg.save(str(tmp_path / "plans.json"))
+    doc = json.loads(open(path).read())
+    blob = json.dumps(doc)
+    assert '"worklist": true' in blob
+    assert '"effective_backend": "pallas"' in blob
+    loaded = PlanRegistry.load(path)
+    assert loaded.network("centerpoint_waymo") == tuned
+    assert loaded.get("centerpoint_waymo") == tuned.assignment()

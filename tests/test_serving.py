@@ -132,9 +132,14 @@ def test_default_serving_space_spans_dataflows_and_backends():
     backends when the installed jax can run Pallas (interpret mode on CPU),
     and degrades to the XLA triple when it can't — never an error."""
     forced = df.default_serving_space(include_pallas=True)
-    assert len(forced) == 6
+    assert len(forced) == 7
     assert {c.dataflow for c in forced} == set(df.DATAFLOWS)
     assert {c.backend for c in forced} == {"xla", "pallas"}
+    # the tile-skipping worklist variant is its own searched point, and
+    # only exists on the pallas implicit-GEMM axis
+    wl = [c for c in forced if c.worklist]
+    assert len(wl) == 1
+    assert wl[0].backend == "pallas" and wl[0].dataflow == "implicit_gemm"
     xla_only = df.default_serving_space(include_pallas=False)
     assert len(xla_only) == 3
     assert all(c.backend == "xla" for c in xla_only)
@@ -168,6 +173,24 @@ def test_dataflow_config_dict_roundtrip():
     assert df.DataflowConfig.from_dict(cfg.to_dict()) == cfg
     with pytest.raises(ValueError):
         df.DataflowConfig.from_dict({"dataflow": "implicit_gemm", "bogus": 1})
+
+
+def test_serialized_config_stamps_effective_backend():
+    """A "pallas" request only *runs* Pallas for dataflows that have a
+    kernel; serialized configs (and therefore tuner sweep logs and plan
+    registries) carry the derived ``effective_backend`` so sweep records
+    say what actually executed."""
+    # gather_scatter has no pallas forward kernel: requested != effective
+    gs = df.DataflowConfig("gather_scatter", backend="pallas")
+    assert gs.to_dict()["effective_backend"] == "xla"
+    assert gs.effective_backend("fwd") == "xla"
+    ig = df.DataflowConfig("implicit_gemm", backend="pallas")
+    assert ig.to_dict()["effective_backend"] == "pallas"
+    assert ig.effective_backend("dgrad") == "xla"   # dgrad is always XLA scan
+    assert ig.effective_backend("wgrad") == "pallas"
+    assert df.DataflowConfig("implicit_gemm").to_dict()["effective_backend"] == "xla"
+    # the stamp is derived, not state: it round-trips away cleanly
+    assert df.DataflowConfig.from_dict(gs.to_dict()) == gs
 
 
 # ----------------------------------------------------------------- engine

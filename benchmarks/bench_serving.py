@@ -336,6 +336,72 @@ def _sharded_leg(arch: str, scenes, bound: int, ladder: BucketLadder,
                 f"throughput_ratio={r_sps / e_sps:.2f}x;devices={n_dev}")
 
 
+def run_fleet(tiny: bool = False, hosts: int = 2):
+    """Fleet-tier leg (its own suite — it spawns worker *processes*): the
+    same replayed warm stream through ``FleetFrontend`` over N localhost
+    workers vs a ``DeviceRouter`` vs the single-device ``Engine``, all at
+    the same ``ServiceConfig``.  Epochs interleave across the three tiers
+    (drift-cancelling, as in the sharded leg) and the fleet results are
+    asserted bit-identical to the engine's before any timing is reported —
+    the RPC boundary must not change a single row.  On one localhost box
+    the fleet ratio prices the wire codec + socket hop; across real hosts
+    the same rows measure scale-out."""
+    import numpy as np
+
+    from repro.serve.fleet import FleetFrontend
+    from repro.serve.service import ServiceConfig
+
+    arch = "minkunet_kitti"
+    if tiny:
+        count, n_range = 6, (80, 400)
+        ladder = BucketLadder((256, 512), max_batch=3)
+        reps = 5
+    else:
+        count, n_range = 24, (200, 1200)
+        ladder = BucketLadder((512, 1024, 2048), max_batch=4)
+        reps = 3
+    channels = ARCHS[arch].in_channels_of(ARCHS[arch].default_config)
+    scenes, bound = lidar_stream(0, count, channels, n_range=n_range)
+    cfg = ServiceConfig.from_ladder(ladder, spatial_bound=bound)
+    eng = Engine(arch, config=cfg)
+    rt = DeviceRouter(arch, devices=jax.device_count(), config=cfg)
+    fl = FleetFrontend(arch, hosts=hosts, config=cfg)
+    try:
+        warm = {}
+        for tag, svc in (("engine", eng), ("router", rt), ("fleet", fl)):
+            svc.warmup()
+            warm[tag] = svc.serve(scenes, flush_every=0)
+        for a, b in zip(warm["fleet"], warm["engine"]):
+            np.testing.assert_array_equal(a.coords, b.coords)
+            np.testing.assert_array_equal(a.feats, b.feats)
+        times = {"engine": [], "router": [], "fleet": []}
+        for _ in range(reps):
+            for tag, svc in (("engine", eng), ("router", rt), ("fleet", fl)):
+                t0 = time.perf_counter()
+                svc.serve(scenes, flush_every=0)
+                times[tag].append(time.perf_counter() - t0)
+        n = len(scenes)
+        sps = {tag: n / statistics.median(v) for tag, v in times.items()}
+        s = fl.stats.summary()
+        common.emit(
+            f"serving/{arch}/fleet_h{hosts}/epoch",
+            statistics.median(times["fleet"]) * 1e6,
+            f"scenes_per_s={sps['fleet']:.2f};"
+            f"router_scenes_per_s={sps['router']:.2f};"
+            f"engine_scenes_per_s={sps['engine']:.2f};"
+            f"schema_version={s['schema_version']};"
+            f"live_hosts={s['fleet']['live']};"
+            f"failovers={s['fleet']['failovers']}")
+        common.emit(
+            f"serving/{arch}/fleet_vs_router_vs_engine", 0.0,
+            f"fleet_vs_engine={sps['fleet'] / sps['engine']:.2f}x;"
+            f"fleet_vs_router={sps['fleet'] / sps['router']:.2f}x;"
+            f"hosts={hosts};bit_identical=True")
+        _emit_phases(arch, f"fleet_h{hosts}", s)
+    finally:
+        fl.close()
+
+
 def run(tiny: bool = False, devices: int = 0):
     if tiny:
         count, n_range, ladder = 6, (80, 400), BucketLadder((256, 512), max_batch=3)

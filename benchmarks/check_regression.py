@@ -28,20 +28,35 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import re
 import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                                 "ci_baseline.json")
 
+#: stats-schema version suffix some emitters stamp into row names
+#: (``serving/arch/leg@v3``) — stripped before baseline matching, so a
+#: schema bump renames nothing from the gate's point of view
+_VERSION_SUFFIX = re.compile(r"@v\d+$")
+
+
+def canonical_name(name: str) -> str:
+    """Row name with any ``@vN`` stats-schema suffix stripped."""
+    return _VERSION_SUFFIX.sub("", name)
+
 
 def rows_of(artifact: dict) -> dict:
     """{row name: us_per_call} over every suite in a BENCH_CI artifact,
-    timed rows only (us > 0; ratio rows carry their payload in derived)."""
+    timed rows only (us > 0; ratio rows carry their payload in derived).
+    Tolerates schema-versioned rows: names are canonicalized (``@vN``
+    stripped) and rows without a ``us_per_call`` field are skipped instead
+    of crashing the gate on an artifact from a newer emitter."""
     out = {}
     for suite in artifact.get("suites", {}).values():
         for row in suite.get("rows", []):
-            if row["us_per_call"] > 0:
-                out[row["name"]] = row["us_per_call"]
+            us = row.get("us_per_call")
+            if us is not None and us > 0:
+                out[canonical_name(row["name"])] = us
     return out
 
 

@@ -65,6 +65,8 @@ def main(argv=None) -> None:
                     help="write the consolidated perf artifact here")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names to run (default all)")
+    ap.add_argument("--hosts", type=int, default=2,
+                    help="localhost worker count for the fleet_serving suite")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_generator, bench_graph, bench_hybrid,
@@ -84,12 +86,17 @@ def main(argv=None) -> None:
         ("fig16_graph", bench_graph.run),
         ("fig8_generator", bench_generator.run),
     ]
+    # Opt-in suites: spawn subprocesses (localhost fleet workers), so they
+    # run only when explicitly named in --only, never by default.
+    opt_in = [
+        ("fleet_serving", bench_serving.run_fleet),
+    ]
     if args.only:
         keep = {s.strip() for s in args.only.split(",")}
-        unknown = keep - {name for name, _ in suites}
+        unknown = keep - {name for name, _ in suites + opt_in}
         if unknown:
             raise SystemExit(f"unknown suites: {sorted(unknown)}")
-        suites = [(n, f) for n, f in suites if n in keep]
+        suites = [(n, f) for n, f in suites + opt_in if n in keep]
 
     print("name,us_per_call,derived")
     failures = []
@@ -98,10 +105,13 @@ def main(argv=None) -> None:
         start = len(common.RECORDS)
         t0 = time.perf_counter()
         try:
-            if args.tiny and "tiny" in inspect.signature(fn).parameters:
-                fn(tiny=True)
-            else:
-                fn()
+            params = inspect.signature(fn).parameters
+            kw = {}
+            if args.tiny and "tiny" in params:
+                kw["tiny"] = True
+            if "hosts" in params:
+                kw["hosts"] = args.hosts
+            fn(**kw)
             ok = True
         except Exception:
             failures.append(name)

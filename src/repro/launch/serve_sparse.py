@@ -7,12 +7,14 @@
         --plans plans.json            # …serve forever
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m repro.launch.serve_sparse --arch minkunet_kitti --devices 4
+    python -m repro.launch.serve_sparse --arch minkunet_kitti --hosts 2
 
-Drives a mixed-size synthetic request stream through ``repro.serve.Engine``
-(or, with ``--devices N > 1``, the sharded ``repro.serve.DeviceRouter``)
-and prints latency/throughput stats (p50/p95 per scene, scenes/s, jit
-recompile and map-cache counters; per-device routing counters when
-sharded).
+Drives a mixed-size synthetic request stream through one of the three
+``SparseService`` tiers — the single-device ``Engine``, the sharded
+``DeviceRouter`` (``--devices N``), or the cross-host ``FleetFrontend``
+(``--hosts N`` spawns N localhost worker processes) — and prints
+latency/throughput stats (p50/p95 per scene, scenes/s, jit recompile and
+map-cache counters; per-device / per-host routing counters when sharded).
 """
 from __future__ import annotations
 
@@ -20,29 +22,36 @@ import argparse
 import contextlib
 
 from repro import obs
-from repro.serve.bucketing import BucketLadder
 from repro.serve.engine import ARCHS, Engine
+from repro.serve.fleet import FleetFrontend
 from repro.serve.plans import PlanRegistry
 from repro.serve.router import DeviceRouter
+from repro.serve.service import ServiceConfig
 from repro.serve.workload import lidar_stream
 
 
-def build_engine(arch: str, buckets, max_batch: int, spatial_bound: int,
-                 plans_path=None, seed: int = 0,
-                 map_strategy=None, devices: int = 1, max_wait_ms=None):
-    """One serving front end: a plain ``Engine`` for a single device, a
-    ``DeviceRouter`` sharding the same ladder across ``devices`` workers
-    otherwise (identical submit/flush/serve API, bit-identical outputs)."""
-    ladder = BucketLadder(tuple(buckets), max_batch=max_batch)
+def build_service(arch: str, buckets, max_batch: int, spatial_bound: int,
+                  plans_path=None, seed: int = 0, map_strategy=None,
+                  devices: int = 1, hosts: int = 1, max_wait_ms=None,
+                  replication: str = "lazy"):
+    """One ``SparseService`` front end, picked from deployment shape alone:
+    a plain ``Engine`` for a single device, a ``DeviceRouter`` sharding the
+    same ladder across ``devices`` workers, or — with ``hosts > 1`` — a
+    ``FleetFrontend`` spawning that many localhost worker processes
+    (identical submit/flush/serve API, bit-identical outputs)."""
+    config = ServiceConfig(buckets=tuple(buckets), max_batch=max_batch,
+                           spatial_bound=spatial_bound, seed=seed,
+                           map_strategy=map_strategy,
+                           max_wait_ms=max_wait_ms)
+    if hosts > 1:
+        # the fleet forwards the plans *path* — worker processes load it
+        return FleetFrontend(arch, hosts=hosts, config=config,
+                             plans=plans_path, replication=replication,
+                             respawn=True, devices_per_host=devices)
     plans = PlanRegistry.load(plans_path) if plans_path else None
     if devices > 1:
-        return DeviceRouter(arch, devices=devices, ladder=ladder,
-                            spatial_bound=spatial_bound, plans=plans,
-                            seed=seed, map_strategy=map_strategy,
-                            max_wait_ms=max_wait_ms)
-    return Engine(arch, ladder=ladder, spatial_bound=spatial_bound,
-                  plans=plans, seed=seed, map_strategy=map_strategy,
-                  max_wait_ms=max_wait_ms)
+        return DeviceRouter(arch, devices=devices, config=config, plans=plans)
+    return Engine(arch, config=config, plans=plans)
 
 
 def fmt_ms(v) -> str:
@@ -67,7 +76,17 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=1,
                     help="shard serving across the first N jax devices "
                          "(CPU smoke: set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N)")
+                         "--xla_force_host_platform_device_count=N); with "
+                         "--hosts, devices per spawned worker")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="fleet tier: spawn N localhost worker processes "
+                         "behind a FleetFrontend (RPC boundary + failover "
+                         "+ weighted routing)")
+    ap.add_argument("--replication", default="lazy",
+                    choices=["lazy", "gossip"],
+                    help="fleet scene-store replication policy: push every "
+                         "admitted scene to all hosts (gossip) or let hosts "
+                         "warm from routed traffic (lazy)")
     ap.add_argument("--plans", default=None,
                     help="PlanRegistry JSON (loaded at startup; --tune writes it)")
     ap.add_argument("--tune", action="store_true",
@@ -102,23 +121,27 @@ def main(argv=None):
     channels = binding.in_channels_of(binding.default_config)
     scenes, bound = lidar_stream(args.seed, args.scenes, channels,
                                  n_range=(args.min_points, args.max_points))
-    engine = build_engine(args.arch, buckets, args.max_batch, bound,
-                          plans_path=args.plans, seed=args.seed,
-                          map_strategy=args.map_strategy,
-                          devices=args.devices, max_wait_ms=args.max_wait_ms)
+    engine = build_service(args.arch, buckets, args.max_batch, bound,
+                           plans_path=args.plans, seed=args.seed,
+                           map_strategy=args.map_strategy,
+                           devices=args.devices, hosts=args.hosts,
+                           max_wait_ms=args.max_wait_ms,
+                           replication=args.replication)
     sharded = isinstance(engine, DeviceRouter)
+    fleet = isinstance(engine, FleetFrontend)
     if args.trace:
         obs.enable()
 
     if args.tune:
         sample = scenes[:min(2, len(scenes))]
         assignment = engine.tune(sample)   # persists when --plans was given
-        n_groups = (sum(len(a) for a in assignment.values()) if sharded
-                    else len(assignment))
+        n_groups = (sum(len(a) for a in assignment.values())
+                    if (sharded or fleet) else len(assignment))
         print(f"tuned {n_groups} groups"
               + (f" across {engine.num_devices} devices" if sharded else "")
+              + (f" across {engine.num_hosts} hosts" if fleet else "")
               + (f" -> {args.plans}" if args.plans else " (not persisted)"))
-    elif not sharded and engine.assignment:
+    elif not (sharded or fleet) and engine.assignment:
         print(f"loaded {len(engine.assignment)} tuned groups from {args.plans}")
 
     engine.warmup()
@@ -134,7 +157,8 @@ def main(argv=None):
 
     s = engine.stats.summary()
     print(f"arch={args.arch} buckets={buckets} max_batch={args.max_batch}"
-          + (f" devices={engine.num_devices}" if sharded else ""))
+          + (f" devices={engine.num_devices}" if sharded else "")
+          + (f" hosts={engine.num_hosts}" if fleet else ""))
     print(f"scenes: {s['scenes']} in {s['batches']} batches "
           f"({s['scenes_per_s']:.1f} scenes/s)")
     print(f"latency: p50 {fmt_ms(s['p50_ms'])}  p95 {fmt_ms(s['p95_ms'])}")
@@ -145,7 +169,10 @@ def main(argv=None):
     print(f"map cache: {s['map_cache']['hits']} hits / "
           f"{s['map_cache']['misses']} misses")
     sc = s["scene_tables"]
-    print(f"scene store [{engine.map_strategy if not sharded else engine.workers[0].map_strategy}]: "
+    strategy = (engine.config.map_strategy or "plan-default" if fleet
+                else engine.workers[0].map_strategy if sharded
+                else engine.map_strategy)
+    print(f"scene store [{strategy}]: "
           f"{sc['hits']} hits / "
           f"{sc['misses']} misses, {sc['composed_batches']} composed batches, "
           f"{sc['delta_merges']} delta merges")
@@ -154,6 +181,19 @@ def main(argv=None):
             print(f"  {name} [{d['device']}]: {d['routed_batches']} batches, "
                   f"{d['scenes']} scenes, p50 {fmt_ms(d['p50_ms'])} "
                   f"p95 {fmt_ms(d['p95_ms'])}, queue_depth {d['queue_depth']}")
+    if fleet:
+        fl = s["fleet"]
+        print(f"fleet: {fl['live']}/{fl['hosts']} hosts live, "
+              f"replication={fl['replication']}, "
+              f"{fl['failovers']} failovers, "
+              f"{fl['rerouted_batches']} rerouted batches, "
+              f"{fl['respawns']} respawns")
+        for name, h in s["hosts"].items():
+            print(f"  {name} [{h['addr']}]"
+                  f"{'' if h['alive'] else ' (dead)'}: "
+                  f"{h['routed_batches']} batches, {h['scenes']} scenes, "
+                  f"weight {h['weight']:.2f}, p50 {fmt_ms(h['p50_ms'])} "
+                  f"p95 {fmt_ms(h['p95_ms'])}")
     if s["phases"]:
         print("phases: " + "  ".join(
             f"{name} p50 {fmt_ms(ph['p50_ms'])}"
@@ -173,6 +213,8 @@ def main(argv=None):
         print(f"trace: {tr['spans']} spans + {tr['events']} events -> {path}"
               + (f" (+ XLA profile in {args.trace}.xprof/)"
                  if profiling else ""))
+    if fleet:
+        engine.close()
 
 
 if __name__ == "__main__":

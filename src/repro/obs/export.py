@@ -7,7 +7,11 @@ Two artifact formats for one ``Tracer``:
   Spans become complete (``"ph": "X"``) events, instant events become
   ``"ph": "i"``, and thread-name metadata rows give one swimlane per
   engine/worker thread, so nested queue/pack/map/execute/unpack phases
-  render as stacked slices per thread.
+  render as stacked slices per thread.  Spans/events carrying a ``host``
+  attr (the fleet front end stamps its RPC spans and liveness events with
+  the worker host's label) are additionally grouped into one synthetic
+  *process* lane per host — the per-host swimlanes of a fleet trace — with
+  ``process_name`` metadata rows naming each ``host hN`` lane.
 * **JSONL** (``.jsonl`` path) — one JSON object per line (``type`` is
   ``span`` / ``event``), closed by a ``snapshot`` line carrying the
   counters/gauges; trivially greppable and streamable.
@@ -32,24 +36,41 @@ def chrome_trace(tracer: Tracer) -> dict:
          "args": {"name": "repro"}},
     ]
     named_tids = set()
+    host_pids = {}
 
-    def thread_meta(tid: int, thread: str) -> None:
-        if tid not in named_tids:
-            named_tids.add(tid)
-            events.append({"name": "thread_name", "ph": "M", "pid": pid,
+    def pid_of(attrs) -> int:
+        """The lane a record renders in: the front-end process by default,
+        a synthetic per-host process when the record names a fleet host."""
+        host = attrs.get("host")
+        if host is None:
+            return pid
+        hpid = host_pids.get(host)
+        if hpid is None:
+            # deterministic synthetic pids, far from real ones
+            hpid = host_pids[host] = 1_000_000 + len(host_pids)
+            events.append({"name": "process_name", "ph": "M", "pid": hpid,
+                           "tid": 0, "args": {"name": f"host {host}"}})
+        return hpid
+
+    def thread_meta(p: int, tid: int, thread: str) -> None:
+        if (p, tid) not in named_tids:
+            named_tids.add((p, tid))
+            events.append({"name": "thread_name", "ph": "M", "pid": p,
                            "tid": tid, "args": {"name": thread}})
 
     for rec in tracer.spans():
-        thread_meta(rec.tid, rec.thread)
+        p = pid_of(rec.attrs)
+        thread_meta(p, rec.tid, rec.thread)
         events.append({
             "name": rec.name, "cat": "phase", "ph": "X",
             "ts": rec.t0_ns / 1e3, "dur": (rec.t1_ns - rec.t0_ns) / 1e3,
-            "pid": pid, "tid": rec.tid, "args": dict(rec.attrs)})
+            "pid": p, "tid": rec.tid, "args": dict(rec.attrs)})
     for rec in tracer.events():
-        thread_meta(rec.tid, rec.thread)
+        p = pid_of(rec.attrs)
+        thread_meta(p, rec.tid, rec.thread)
         events.append({
             "name": rec.name, "cat": "event", "ph": "i", "s": "t",
-            "ts": rec.t_ns / 1e3, "pid": pid, "tid": rec.tid,
+            "ts": rec.t_ns / 1e3, "pid": p, "tid": rec.tid,
             "args": dict(rec.attrs)})
     return {"traceEvents": events, "displayTimeUnit": "ms",
             "otherData": tracer.snapshot()}

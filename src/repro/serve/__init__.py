@@ -1,14 +1,19 @@
 """Sparse serving engine: bucketed dynamic batching, scene-granular and
-streaming map reuse, persisted tuned plans, and the multi-device routed
-tier (see engine.py and router.py for the architecture)."""
+streaming map reuse, persisted tuned plans, the multi-device routed tier,
+and the cross-host fleet tier — all behind one ``SparseService`` protocol
+(see engine.py, router.py, fleet.py and service.py for the architecture)."""
 from repro.serve.batcher import (PackedBatch, Scene, SceneBatcher, SceneDelta,
                                  SceneResult, apply_delta, scene_from_tensor)
 from repro.serve.bucketing import BucketLadder
 from repro.serve.engine import ARCHS, Engine, EngineStats
+from repro.serve.fleet import FleetFrontend, FleetStats, FleetWorker
 from repro.serve.plans import PlanRegistry, device_key
 from repro.serve.router import DeviceRouter, RouterStats
+from repro.serve.service import (STATS_SCHEMA_VERSION, ServiceConfig,
+                                 SparseService)
 
 __all__ = ["ARCHS", "BucketLadder", "DeviceRouter", "Engine", "EngineStats",
-           "PackedBatch", "PlanRegistry", "RouterStats", "Scene",
-           "SceneBatcher", "SceneDelta", "SceneResult", "apply_delta",
-           "device_key", "scene_from_tensor"]
+           "FleetFrontend", "FleetStats", "FleetWorker", "PackedBatch",
+           "PlanRegistry", "RouterStats", "STATS_SCHEMA_VERSION", "Scene",
+           "SceneBatcher", "SceneDelta", "SceneResult", "ServiceConfig",
+           "SparseService", "apply_delta", "device_key", "scene_from_tensor"]

@@ -81,6 +81,8 @@ from repro.serve.batcher import (PackedBatch, Scene, SceneBatcher, SceneDelta,
                                  SceneResult, apply_delta)
 from repro.serve.bucketing import BucketLadder
 from repro.serve.plans import PlanRegistry
+from repro.serve.service import (STATS_SCHEMA_VERSION, ServiceConfig,
+                                 resolve_config)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,6 +247,7 @@ class EngineStats:
     def summary(self) -> dict:
         p50, p95 = percentiles_ms(self.latencies_ms)
         return {
+            "schema_version": STATS_SCHEMA_VERSION,
             "scenes": self.completed,
             "batches": self.batches,
             "routed_batches": self.routed_batches,
@@ -322,38 +325,42 @@ class Engine:
     plan_key: the PlanRegistry name to read/write plans under (defaults to
         ``arch``; the router routes per-device entries like ``arch@dev2``
         here — see ``serve.plans.device_key``).
+
+    All behavioral knobs above (ladder, spatial_bound, seed, map_strategy,
+    caches, deadlines, …) now live in one serializable ``ServiceConfig`` —
+    pass ``config=ServiceConfig(...)``.  The historical per-kwarg spelling
+    keeps working through ``resolve_config`` (one DeprecationWarning per
+    process); ``model_config`` / ``params`` / ``plans`` / ``precision`` /
+    ``device`` stay direct arguments because they are runtime objects, not
+    serializable configuration.
     """
 
-    def __init__(self, arch: str, ladder: BucketLadder = DEFAULT_LADDER,
-                 spatial_bound: int = DEFAULT_SPATIAL_BOUND,
+    def __init__(self, arch: str, config: Optional[ServiceConfig] = None,
                  model_config=None, params=None,
                  plans: Optional[PlanRegistry] = None,
-                 maps_cache_size: int = 32, seed: int = 0,
-                 precision=None, map_strategy: Optional[str] = None,
-                 scene_cache_size: int = 64,
-                 scene_cache_bytes: Optional[int] = None,
-                 max_wait_ms: Optional[float] = None,
-                 flush_count: Optional[int] = None,
-                 max_inflight: int = 2,
-                 deadline_margin: Optional[float] = None,
-                 device: Optional[jax.Device] = None,
-                 plan_key: Optional[str] = None):
+                 precision=None,
+                 device: Optional[jax.Device] = None, **legacy):
         if arch not in ARCHS:
             raise ValueError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+        if isinstance(config, BucketLadder):   # Engine(arch, ladder) callers
+            legacy.setdefault("ladder", config)
+            config = None
+        self.config = resolve_config(config, legacy)
+        cfg_s = self.config
         self.binding = ARCHS[arch]
         self.arch = arch
         self.device = device
         self.cfg = model_config if model_config is not None else self.binding.default_config
         self.params = params if params is not None else self.binding.model.init_params(
-            self.cfg, jax.random.PRNGKey(seed))
+            self.cfg, jax.random.PRNGKey(cfg_s.seed))
         if device is not None:
             self.params = jax.device_put(self.params, device)
-        self.ladder = ladder
-        self.batcher = SceneBatcher(ladder, spatial_bound)
+        self.ladder = cfg_s.ladder()
+        self.batcher = SceneBatcher(self.ladder, cfg_s.spatial_bound)
         if isinstance(plans, str):
             plans = PlanRegistry.load(plans)
         self.plans = plans or PlanRegistry()
-        self.plan_key = plan_key or arch
+        self.plan_key = cfg_s.plan_key or arch
         self.assignment = self.plans.get(self.plan_key)
         # The compiled artifact every stage shares: a persisted NetworkPlan
         # is used as-is when it still matches this engine's model config
@@ -370,18 +377,19 @@ class Engine:
             nplan = nplan.with_precision(precision)
         self.nplan: NetworkPlan = nplan
         self.out_stride = self.binding.out_stride_of(self.cfg)
-        self.map_strategy = (map_strategy if map_strategy is not None
+        self.map_strategy = (cfg_s.map_strategy
+                             if cfg_s.map_strategy is not None
                              else self.nplan.table_strategy)
         assert self.map_strategy in KmapSpec.TABLE_STRATEGIES, self.map_strategy
-        self.max_wait_ms = max_wait_ms
-        self.flush_count = flush_count
-        assert max_inflight >= 1, max_inflight
-        self.max_inflight = max_inflight
-        self.deadline_margin = deadline_margin
+        self.max_wait_ms = cfg_s.max_wait_ms
+        self.flush_count = cfg_s.flush_count
+        assert cfg_s.max_inflight >= 1, cfg_s.max_inflight
+        self.max_inflight = cfg_s.max_inflight
+        self.deadline_margin = cfg_s.deadline_margin
         self.stats = EngineStats()
-        self.maps_cache_size = maps_cache_size
-        self.scene_cache_size = scene_cache_size
-        self.scene_cache_bytes = scene_cache_bytes
+        self.maps_cache_size = cfg_s.maps_cache_size
+        self.scene_cache_size = cfg_s.scene_cache_size
+        self.scene_cache_bytes = cfg_s.scene_cache_bytes
         self._queue: List[tuple] = []       # (ticket, Scene, t_submit)
         self._next_ticket = 0
         self._ready: Dict[int, SceneResult] = {}   # auto-flushed results
@@ -411,8 +419,8 @@ class Engine:
         # per-scene builds jit once per rung of a small capacity ladder
         # (scene sizes vary request to request; exact-size eager builds
         # would recompile every op per distinct size)
-        caps = [min(64, ladder.capacities[0])]
-        while caps[-1] < ladder.max_capacity:
+        caps = [min(64, self.ladder.capacities[0])]
+        while caps[-1] < self.ladder.max_capacity:
             caps.append(caps[-1] * 2)
         self._scene_ladder = BucketLadder(tuple(caps), max_batch=1)
 
@@ -1051,6 +1059,7 @@ class Engine:
         self.nplan = tuned
         self.assignment = tuned.assignment()
         self.plans.set(self.plan_key, self.assignment, network=tuned)
+        self.plans.set_service(self.plan_key, self.config)
         if save and self.plans.path:
             self.plans.save()
         self._executors.clear()     # recompile with the tuned plan

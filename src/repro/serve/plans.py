@@ -13,7 +13,8 @@ Schema (version 2)::
      "plans": {"minkunet_kitti": {
          "assignment": {"1:3:sub": {"fwd": {...DataflowConfig...},
                                     "dgrad": ..., "wgrad": ...}, ...},
-         "network": {...serialized core.plan.NetworkPlan...} | null}}}
+         "network": {...serialized core.plan.NetworkPlan...} | null,
+         "service": {...ServiceConfig.to_dict()...} | null}}}
 
 The per-signature ``assignment`` block is the schema-v1 payload (kept both
 for humans diffing plan files and so a v2 file degrades gracefully);
@@ -74,6 +75,10 @@ class PlanRegistry:
         self.path = path
         self._plans: Dict[str, Assignment] = {}
         self._networks: Dict[str, NetworkPlan] = {}
+        # the ServiceConfig each plan was tuned/served under ("service" key
+        # per entry; absent in older files) — "the config that served this
+        # plan" persists next to the plan instead of living in folklore
+        self._services: Dict[str, dict] = {}
 
     def set(self, arch: str, assignment: Assignment,
             network: Optional[NetworkPlan] = None) -> None:
@@ -93,6 +98,19 @@ class PlanRegistry:
         model declaration)."""
         return self._networks.get(arch)
 
+    def set_service(self, arch: str, config) -> None:
+        """Record the ``ServiceConfig`` ``arch``'s plan was tuned under."""
+        self._services[arch] = config.to_dict()
+
+    def service(self, arch: str):
+        """The persisted ``ServiceConfig`` for ``arch`` (None when the entry
+        predates service persistence or was never recorded)."""
+        d = self._services.get(arch)
+        if d is None:
+            return None
+        from repro.serve.service import ServiceConfig
+        return ServiceConfig.from_dict(d)
+
     def archs(self):
         return sorted(self._plans)
 
@@ -110,12 +128,15 @@ class PlanRegistry:
         return arch
 
     def to_dict(self) -> dict:
+        names = sorted(set(self._plans) | set(self._services))
         return {"version": _VERSION,
                 "plans": {arch: {
-                    "assignment": _assignment_to_json(assignment),
+                    "assignment": _assignment_to_json(
+                        self._plans.get(arch, {})),
                     "network": (self._networks[arch].to_dict()
-                                if arch in self._networks else None)}
-                    for arch, assignment in sorted(self._plans.items())}}
+                                if arch in self._networks else None),
+                    "service": self._services.get(arch)}
+                    for arch in names}}
 
     def save(self, path: Optional[str] = None) -> str:
         path = path or self.path
@@ -151,4 +172,7 @@ class PlanRegistry:
             net = entry.get("network")
             if net is not None:
                 reg._networks[arch] = NetworkPlan.from_dict(net)
+            svc = entry.get("service")
+            if svc is not None:
+                reg._services[arch] = svc
         return reg

@@ -54,6 +54,8 @@ from repro.serve.engine import (DEFAULT_LADDER, DEFAULT_SPATIAL_BOUND, ARCHS,
                                 Engine, EngineStats, PHASE_WINDOW,
                                 percentiles_ms, summarize_phases)
 from repro.serve.plans import PlanRegistry, device_key
+from repro.serve.service import (STATS_SCHEMA_VERSION, ServiceConfig,
+                                 resolve_config)
 
 
 class RouterStats:
@@ -75,6 +77,10 @@ class RouterStats:
         #: (device_index, padded_rows) per routed batch, in routing order —
         #: the determinism contract is over this log
         self.route_log: List[Tuple[int, int]] = []
+        # failover accounting: a worker whose shard raises is declared dead
+        # and its unfinished groups re-route to the survivors
+        self.worker_failures = 0
+        self.rerouted_batches = 0
         # router-level phase windows (queue_wait happens before routing, so
         # it belongs to the tier, not to any worker) + SLO accounting
         self.phases: Dict[str, collections.deque] = {}
@@ -125,6 +131,7 @@ class RouterStats:
             dp50, dp95 = self._pctl([w.stats.latencies_ms])
             devices[f"d{i}"] = {
                 "device": str(w.device),
+                "alive": i not in self._router.dead,
                 "routed_batches": w.stats.routed_batches,
                 "queue_depth": self._router.outstanding_rows[i],
                 "scenes": w.stats.completed,
@@ -143,6 +150,7 @@ class RouterStats:
         device_busy = sum(s.device_busy_s for s in stats)
         overlap = sum(s.overlap_s for s in stats)
         return {
+            "schema_version": STATS_SCHEMA_VERSION,
             "scenes": completed,
             "batches": sum(s.batches for s in stats),
             "routed_batches": sum(s.routed_batches for s in stats),
@@ -174,6 +182,11 @@ class RouterStats:
                               if slo_measured else None),
             },
             "devices": devices,
+            "failover": {
+                "dead": sorted(f"d{i}" for i in self._router.dead),
+                "worker_failures": self.worker_failures,
+                "rerouted_batches": self.rerouted_batches,
+            },
         }
 
 
@@ -191,54 +204,48 @@ class DeviceRouter:
         engine's double-buffered pipeline, so one worker overlaps its *own*
         host mapping with its own device compute on top of the cross-worker
         thread overlap.
-    Remaining arguments match ``Engine``.
+    Remaining behavioral knobs come from ``config=ServiceConfig(...)``
+        (legacy per-kwarg spelling still works — see ``Engine``); the
+        config is forwarded to every worker with its per-device plan key.
     """
 
     def __init__(self, arch: str, devices=None,
-                 ladder: BucketLadder = DEFAULT_LADDER,
-                 spatial_bound: int = DEFAULT_SPATIAL_BOUND,
+                 config: Optional[ServiceConfig] = None,
                  model_config=None, params=None,
                  plans: Optional[PlanRegistry] = None,
-                 maps_cache_size: int = 32, seed: int = 0,
-                 precision=None, map_strategy: Optional[str] = None,
-                 scene_cache_size: int = 64,
-                 scene_cache_bytes: Optional[int] = None,
-                 max_wait_ms: Optional[float] = None,
-                 flush_count: Optional[int] = None,
-                 max_inflight: int = 2,
-                 deadline_margin: Optional[float] = None,
-                 parallel: bool = True):
+                 precision=None, parallel: bool = True, **legacy):
         if arch not in ARCHS:
             raise ValueError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+        if isinstance(config, BucketLadder):   # (arch, devices, ladder) callers
+            legacy.setdefault("ladder", config)
+            config = None
+        self.config = resolve_config(config, legacy)
+        cfg_s = self.config
         if isinstance(devices, int) or devices is None:
             devices = serving_devices(devices)
         self.devices = list(devices)
         assert self.devices, "DeviceRouter needs at least one device"
         self.arch = arch
-        self.ladder = ladder
+        self.ladder = cfg_s.ladder()
         self.parallel = parallel
-        self.max_wait_ms = max_wait_ms
-        self.flush_count = flush_count
-        self.max_inflight = max_inflight
-        self.deadline_margin = deadline_margin
+        self.max_wait_ms = cfg_s.max_wait_ms
+        self.flush_count = cfg_s.flush_count
+        self.max_inflight = cfg_s.max_inflight
+        self.deadline_margin = cfg_s.deadline_margin
         if isinstance(plans, str):
             plans = PlanRegistry.load(plans)
         self.plans = plans or PlanRegistry()
         binding = ARCHS[arch]
         cfg = model_config if model_config is not None else binding.default_config
         if params is None:
-            params = binding.model.init_params(cfg, jax.random.PRNGKey(seed))
+            params = binding.model.init_params(cfg,
+                                               jax.random.PRNGKey(cfg_s.seed))
         self.workers: List[Engine] = [
-            Engine(arch, ladder=ladder, spatial_bound=spatial_bound,
+            Engine(arch,
+                   config=cfg_s.replace(
+                       plan_key=self.plans.resolve_key(arch, i)),
                    model_config=cfg, params=params, plans=self.plans,
-                   maps_cache_size=maps_cache_size, seed=seed,
-                   precision=precision, map_strategy=map_strategy,
-                   scene_cache_size=scene_cache_size,
-                   scene_cache_bytes=scene_cache_bytes,
-                   max_wait_ms=max_wait_ms, device=dev,
-                   max_inflight=max_inflight,
-                   deadline_margin=deadline_margin,
-                   plan_key=self.plans.resolve_key(arch, i))
+                   precision=precision, device=dev)
             for i, dev in enumerate(self.devices)]
         # one host-side scene store (and guard) for the whole tier: entries
         # are device-agnostic numpy, so any worker's build serves every device
@@ -250,6 +257,9 @@ class DeviceRouter:
         self.batcher: SceneBatcher = self.workers[0].batcher
         self.stats = RouterStats(self)
         self.outstanding_rows = [0] * len(self.workers)
+        #: worker indices declared dead by a raising shard — excluded from
+        #: routing; their unfinished groups re-route to the survivors
+        self.dead: set = set()
         self._rr = 0                       # round-robin cursor for tie-breaks
         self._queue: List[tuple] = []      # (ticket, Scene, t_submit)
         self._next_ticket = 0
@@ -271,12 +281,16 @@ class DeviceRouter:
     # ---------------------------------------------------------------- route
     def _route(self, padded_rows: int) -> int:
         """Worker index for a batch costing ``padded_rows``: least
-        outstanding padded rows; exact ties fall to the round-robin cursor.
-        Deterministic in the sequence of routed row counts."""
+        outstanding padded rows over *live* workers; exact ties fall to the
+        round-robin cursor.  Deterministic in the sequence of routed row
+        counts and the liveness state."""
         loads = self.outstanding_rows
         n = len(loads)
-        lo = min(loads)
-        pick = min((i for i in range(n) if loads[i] == lo),
+        live = [i for i in range(n) if i not in self.dead]
+        if not live:
+            raise RuntimeError("all router workers are dead")
+        lo = min(loads[i] for i in live)
+        pick = min((i for i in live if loads[i] == lo),
                    key=lambda i: (i - self._rr) % n)
         obs.event("route", device=f"d{pick}",
                   device_name=str(self.devices[pick]), rows=padded_rows,
@@ -368,15 +382,16 @@ class DeviceRouter:
         # single engine would
         groups = self.batcher.plan(sizes,
                                    cut_first=self.workers[0]._deadline_cut(queue))
-        shards: List[List[Tuple[List[int], int]]] = [[] for _ in self.workers]
-        for group in groups:
-            rows = self.ladder.group_capacity([sizes[i] for i in group])
-            shards[self._route(rows)].append((group, rows))
+        pending = [(group, self.ladder.group_capacity([sizes[i] for i in group]))
+                   for group in groups]
+        completed: List[tuple] = []     # (group, per_scene, t_done)
 
-        def run_shard(wi: int):
+        def run_shard(wi: int, items):
+            """Run one worker's assigned groups; a raising batch doesn't
+            propagate — it declares the worker failed and hands its
+            unfinished groups back for re-routing."""
             w = self.workers[wi]
             done = []
-            items = shards[wi]
             n_done = 0
 
             def on_done(k, batch, per_scene):
@@ -387,7 +402,7 @@ class DeviceRouter:
                 self.outstanding_rows[wi] -= rows
                 n_done += 1
                 w.stats.routed_batches += 1
-                done.append((group, per_scene, time.perf_counter()))
+                done.append((wi, group, per_scene, time.perf_counter()))
 
             urgent = None
             if self.deadline_margin is not None and self.max_wait_ms is not None:
@@ -397,6 +412,7 @@ class DeviceRouter:
                     return (budget is not None and
                             (time.perf_counter() - oldest) * 1e3 >= budget)
 
+            err = None
             try:
                 with obs.span("shard", device=f"d{wi}",
                               device_name=str(w.device),
@@ -404,34 +420,59 @@ class DeviceRouter:
                     w._run_pipeline(
                         [[queue[i][1] for i in group] for group, _ in items],
                         on_done, urgent)
+            except Exception as e:        # device loss / injected failure
+                err = e
             finally:
-                # a raising batch aborts the shard: un-charge it and every
-                # unprocessed group, or the leaked load score would bias
-                # routing away from a healthy worker forever
+                # an aborted shard: un-charge every unprocessed group, or
+                # the leaked load score would bias routing away from a
+                # healthy worker forever
                 for _, rows in items[n_done:]:
                     self.outstanding_rows[wi] -= rows
-            return done
+            return done, items[n_done:], err
 
-        active = [wi for wi in range(len(self.workers)) if shards[wi]]
-        if self._pool is not None and len(active) > 1:
-            finished = list(self._pool.map(run_shard, active))
-        else:
-            finished = [run_shard(wi) for wi in active]
+        while pending:
+            shards: List[list] = [[] for _ in self.workers]
+            for item in pending:
+                shards[self._route(item[1])].append(item)
+            pending = []
+            active = [wi for wi in range(len(self.workers)) if shards[wi]]
+            if self._pool is not None and len(active) > 1:
+                finished = list(self._pool.map(
+                    lambda wi: run_shard(wi, shards[wi]), active))
+            else:
+                finished = [run_shard(wi, shards[wi]) for wi in active]
+            for wi, (done, failed, err) in zip(active, finished):
+                completed.extend(done)
+                if err is None:
+                    continue
+                # failover: declare the worker dead, re-route what it did
+                # not finish to the survivors (groups are idempotent —
+                # re-execution yields bit-identical rows)
+                self.dead.add(wi)
+                self.stats.worker_failures += 1
+                self.stats.rerouted_batches += len(failed)
+                pending.extend(failed)
+                obs.event("worker_down", device=f"d{wi}",
+                          rerouted=len(failed), error=repr(err))
+                if not any(i not in self.dead
+                           for i in range(len(self.workers))):
+                    raise RuntimeError(
+                        f"all router workers dead with {len(pending)} "
+                        f"batches outstanding") from err
 
         results: Dict[int, SceneResult] = {}
-        for wi, done in zip(active, finished):
-            for group, per_scene, t_done in done:
-                for slot, i in enumerate(group):
-                    ticket, _, t_sub = queue[i]
-                    results[ticket] = per_scene[slot]
-                    lat_ms = (t_done - t_sub) * 1e3
-                    self.workers[wi].stats.latencies_ms.append(lat_ms)
-                    obs.record_span("request", int(t_sub * 1e9),
-                                    int(t_done * 1e9), ticket=ticket,
-                                    device=f"d{wi}")
-                    if self.max_wait_ms is not None:
-                        # max_wait_ms doubles as the per-request latency SLO
-                        self.stats.slo_observe(lat_ms, self.max_wait_ms)
+        for wi, group, per_scene, t_done in completed:
+            for slot, i in enumerate(group):
+                ticket, _, t_sub = queue[i]
+                results[ticket] = per_scene[slot]
+                lat_ms = (t_done - t_sub) * 1e3
+                self.workers[wi].stats.latencies_ms.append(lat_ms)
+                obs.record_span("request", int(t_sub * 1e9),
+                                int(t_done * 1e9), ticket=ticket,
+                                device=f"d{wi}")
+                if self.max_wait_ms is not None:
+                    # max_wait_ms doubles as the per-request latency SLO
+                    self.stats.slo_observe(lat_ms, self.max_wait_ms)
         return results
 
     def serve(self, scenes: Sequence[Scene],

@@ -1,0 +1,167 @@
+"""The serving tiers' shared contract: ``SparseService`` + ``ServiceConfig``.
+
+Three front ends serve the same sparse workloads at three scales — the
+single-device ``Engine``, the multi-device ``DeviceRouter``, and the
+cross-host ``FleetFrontend`` — and the promise of the whole serving stack
+is that they are interchangeable: same ``submit``/``flush`` semantics,
+bit-identical outputs on the same stream (asserted by the conformance
+suite in tests/test_fleet.py).  This module pins that promise down:
+
+* ``SparseService`` — the structural protocol every tier implements.
+  Callers (the CLI, benchmarks, tests) program against it, never against a
+  concrete tier; ``build_service`` in launch/serve_sparse.py picks the tier
+  from deployment shape alone.
+* ``ServiceConfig`` — one serializable dataclass holding every behavioral
+  knob the tiers share (the bucket ladder, admission deadlines, cache
+  bounds, pipeline depth, …).  It crosses process boundaries (the fleet
+  ships it to workers as JSON) and persists alongside tuned plans in
+  ``PlanRegistry``, so "the config that served this plan" stops being
+  folklore.  Legacy per-kwarg construction still works through a
+  deprecation shim that warns once per process.
+* ``STATS_SCHEMA_VERSION`` — the version stamped into every tier's
+  ``stats.summary()`` dict, so the stats schema is an explicit contract
+  (benchmarks/check_regression.py tolerates version-suffixed rows instead
+  of silently drifting).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import (Dict, List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
+
+from repro.serve.batcher import Scene, SceneDelta, SceneResult
+from repro.serve.bucketing import BucketLadder
+
+#: Version of the ``stats.summary()`` dict shape shared by EngineStats /
+#: RouterStats / FleetStats.  History: 1 = PR-2 engine stats, 2 = PR-5
+#: router ``devices`` merge, 3 = this tier (``hosts``/``fleet`` blocks +
+#: the stamp itself).  Bump when a key is renamed or removed — additions
+#: are compatible and don't require one.
+STATS_SCHEMA_VERSION = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Every shared serving knob, one serializable value.
+
+    The fields mirror the historical ``Engine``/``DeviceRouter`` kwargs —
+    see engine.py for per-knob semantics.  ``buckets``/``max_batch`` are
+    the ``BucketLadder`` flattened to plain data (``ladder()`` rebuilds
+    it); everything here must stay JSON-able because the fleet ships this
+    exact dict to worker processes and ``PlanRegistry`` persists it next
+    to tuned plans.
+    """
+
+    buckets: Tuple[int, ...] = (512, 1024, 2048)
+    max_batch: int = 4
+    spatial_bound: int = 256
+    seed: int = 0
+    map_strategy: Optional[str] = None
+    maps_cache_size: int = 32
+    scene_cache_size: int = 64
+    scene_cache_bytes: Optional[int] = None
+    max_wait_ms: Optional[float] = None
+    flush_count: Optional[int] = None
+    max_inflight: int = 2
+    deadline_margin: Optional[float] = None
+    plan_key: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "buckets", tuple(int(b) for b in self.buckets))
+        self.ladder()   # validate: ascending, positive, max_batch >= 1
+
+    def ladder(self) -> BucketLadder:
+        return BucketLadder(self.buckets, max_batch=self.max_batch)
+
+    def replace(self, **changes) -> "ServiceConfig":
+        return dataclasses.replace(self, **changes)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["buckets"] = list(self.buckets)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServiceConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ServiceConfig keys {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        return cls(**d)
+
+    @classmethod
+    def from_ladder(cls, ladder: BucketLadder, **kw) -> "ServiceConfig":
+        return cls(buckets=ladder.capacities, max_batch=ladder.max_batch, **kw)
+
+
+#: ServiceConfig fields a tier constructor accepts as direct (legacy)
+#: kwargs, plus ``ladder`` which flattens into buckets/max_batch.
+_LEGACY_FIELDS = frozenset(f.name for f in dataclasses.fields(ServiceConfig)
+                           if f.name not in ("buckets", "max_batch"))
+
+#: one-shot flag for the legacy-kwarg deprecation warning (a serving test
+#: suite constructs hundreds of engines; one nudge per process is enough)
+_LEGACY_WARNED = [False]
+
+
+def resolve_config(config: Optional[ServiceConfig],
+                   legacy: dict) -> ServiceConfig:
+    """Fold legacy per-kwarg construction into one ``ServiceConfig``.
+
+    config: an explicit ServiceConfig (the modern path) or None.
+    legacy: constructor ``**kwargs`` — ``ladder`` plus any ServiceConfig
+        field name.  Unknown names raise TypeError (typo protection —
+        exactly what ``**kwargs`` would otherwise silently eat); known
+        names override ``config``'s fields and warn once per process.
+    """
+    changes = {}
+    ladder = legacy.pop("ladder", None)
+    if ladder is not None:
+        changes["buckets"] = ladder.capacities
+        changes["max_batch"] = ladder.max_batch
+    unknown = set(legacy) - _LEGACY_FIELDS
+    if unknown:
+        raise TypeError(f"unexpected serving kwargs {sorted(unknown)}; "
+                        f"pass a ServiceConfig or one of "
+                        f"{sorted(_LEGACY_FIELDS | {'ladder'})}")
+    changes.update(legacy)
+    if changes and not _LEGACY_WARNED[0]:
+        _LEGACY_WARNED[0] = True
+        warnings.warn(
+            "per-kwarg serving construction (ladder=…, max_wait_ms=…, …) is "
+            "deprecated: pass config=ServiceConfig(...) — legacy kwargs keep "
+            "working but this warning fires once per process",
+            DeprecationWarning, stacklevel=3)
+    base = config if config is not None else ServiceConfig()
+    return base.replace(**changes) if changes else base
+
+
+@runtime_checkable
+class SparseService(Protocol):
+    """What every serving tier exposes — program against this, not a tier.
+
+    ``stats`` is an attribute whose ``summary()`` returns the shared
+    stats dict (stamped with ``STATS_SCHEMA_VERSION``); the methods mirror
+    ``Engine``'s request API exactly.  ``isinstance(x, SparseService)``
+    works (structurally) on all three tiers.
+    """
+
+    config: ServiceConfig
+    stats: object        # EngineStats | RouterStats | FleetStats
+
+    def submit(self, scene: Scene, stream: Optional[str] = None) -> int: ...
+
+    def submit_delta(self, stream: str, delta: SceneDelta) -> int: ...
+
+    def poll(self) -> Dict[int, SceneResult]: ...
+
+    def flush(self) -> Dict[int, SceneResult]: ...
+
+    def serve(self, scenes: Sequence[Scene],
+              flush_every: int = 0) -> List[SceneResult]: ...
+
+    def warmup(self, channels: Optional[int] = None) -> None: ...
+
+    def tune(self, sample_scenes: Sequence[Scene], **kw) -> dict: ...

@@ -1,0 +1,296 @@
+"""Length-prefixed binary RPC frames for the serving fleet — pure numpy.
+
+The fleet boundary (serve/fleet.py) ships ``Scene``s out to worker hosts
+and per-scene results back.  Everything that crosses it is already
+host-side numpy by PR-5 construction (the batcher packs on the host; the
+engine unpacks to numpy), so the wire format needs no third-party codec:
+a small self-describing binary encoding of python scalars / str / bytes /
+list / dict / ndarray, framed with a magic + version + length prefix.
+
+Frame layout (big-endian)::
+
+    'S' 'W'  version:u8  kind:u8  length:u32  payload[length]
+
+``kind`` is free for the application (the fleet uses KIND_MSG for every
+op); ``version`` gates decoding — a reader rejects frames from a newer
+protocol instead of mis-parsing them.
+
+Value encoding is one tag byte per node::
+
+    N none | T true | F false | I int:i64 | f float:f64
+    S str:u32+utf8 | B bytes:u32 | L list:u32+items
+    D dict:u32+(key,value) pairs (keys are arbitrary encoded values —
+      stats dicts key recompile counters by int bucket capacity)
+    A ndarray: dtype-name str, ndim u8, dims u32*, raw C-order bytes
+
+Arrays preserve dtype, shape and byte content exactly — including
+``bfloat16`` (ml_dtypes, jax's own dependency) whose raw 2-byte words
+round-trip bit-identically, so a bf16 feature tensor crosses the fleet
+boundary without a float32 detour.  Big ints that overflow i64 raise
+rather than truncate.
+
+``Scene`` / ``SceneDelta`` / ``SceneResult`` / ``PackedBatch`` get
+dedicated to/from-dict helpers so the declared-bounds contract
+(``batch_bound`` / ``spatial_bound`` / ``stride``) survives the trip —
+a worker that rebuilt a batch with different bounds would pack different
+keys and silently break bit-identity.
+"""
+from __future__ import annotations
+
+import io
+import socket
+import struct
+from typing import Any, Tuple
+
+import numpy as np
+
+from repro.core.sparse_tensor import SparseTensor
+
+MAGIC = b"SW"
+WIRE_VERSION = 1
+
+#: the one frame kind the fleet protocol uses (frames carry dict messages)
+KIND_MSG = 1
+
+_HEADER = struct.Struct(">2sBBI")
+
+#: dtypes reconstructible by name through plain numpy
+_EXTRA_DTYPES = {}
+try:                                    # jax depends on ml_dtypes, but keep
+    import ml_dtypes                    # the codec importable without it
+    for _name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        if hasattr(ml_dtypes, _name):
+            _EXTRA_DTYPES[_name] = np.dtype(getattr(ml_dtypes, _name))
+except ImportError:                     # pragma: no cover - minimal envs
+    pass
+
+
+class WireError(ValueError):
+    """Malformed frame or unsupported value/protocol version."""
+
+
+def _dtype_by_name(name: str) -> np.dtype:
+    if name in _EXTRA_DTYPES:
+        return _EXTRA_DTYPES[name]
+    try:
+        return np.dtype(name)
+    except TypeError as e:
+        raise WireError(f"undecodable dtype {name!r}") from e
+
+
+# --------------------------------------------------------------- value codec
+
+def _encode_value(out: io.BytesIO, v: Any) -> None:
+    if isinstance(v, np.ndarray):
+        name = v.dtype.name
+        if _dtype_by_name(name) != v.dtype:
+            raise WireError(f"dtype {v.dtype} has no stable wire name")
+        # ascontiguousarray promotes 0-d to 1-d; restore the true shape
+        a = np.ascontiguousarray(v).reshape(v.shape)
+        nb = name.encode("ascii")
+        out.write(b"A" + struct.pack(">I", len(nb)) + nb)
+        out.write(struct.pack(">B", a.ndim))
+        if a.ndim:
+            out.write(struct.pack(f">{a.ndim}I", *a.shape))
+        raw = a.tobytes()
+        out.write(struct.pack(">I", len(raw)) + raw)
+    elif v is None:
+        out.write(b"N")
+    elif isinstance(v, (bool, np.bool_)):   # before int: bool ⊂ int
+        out.write(b"T" if v else b"F")
+    elif isinstance(v, (int, np.integer)):
+        i = int(v)
+        try:
+            out.write(b"I" + struct.pack(">q", i))
+        except struct.error as e:
+            raise WireError(f"int {i} overflows the i64 wire word") from e
+    elif isinstance(v, (float, np.floating)):
+        out.write(b"f" + struct.pack(">d", float(v)))
+    elif isinstance(v, str):
+        b = v.encode("utf-8")
+        out.write(b"S" + struct.pack(">I", len(b)) + b)
+    elif isinstance(v, bytes):
+        out.write(b"B" + struct.pack(">I", len(v)) + v)
+    elif isinstance(v, (list, tuple)):
+        out.write(b"L" + struct.pack(">I", len(v)))
+        for item in v:
+            _encode_value(out, item)
+    elif isinstance(v, dict):
+        out.write(b"D" + struct.pack(">I", len(v)))
+        for k, val in v.items():
+            _encode_value(out, k)
+            _encode_value(out, val)
+    else:
+        raise WireError(f"unencodable value of type {type(v).__name__}")
+
+
+def _read(buf: io.BytesIO, n: int) -> bytes:
+    b = buf.read(n)
+    if len(b) != n:
+        raise WireError(f"truncated payload: wanted {n} bytes, got {len(b)}")
+    return b
+
+
+def _decode_value(buf: io.BytesIO) -> Any:
+    tag = _read(buf, 1)
+    if tag == b"N":
+        return None
+    if tag == b"T":
+        return True
+    if tag == b"F":
+        return False
+    if tag == b"I":
+        return struct.unpack(">q", _read(buf, 8))[0]
+    if tag == b"f":
+        return struct.unpack(">d", _read(buf, 8))[0]
+    if tag == b"S":
+        (n,) = struct.unpack(">I", _read(buf, 4))
+        return _read(buf, n).decode("utf-8")
+    if tag == b"B":
+        (n,) = struct.unpack(">I", _read(buf, 4))
+        return _read(buf, n)
+    if tag == b"L":
+        (n,) = struct.unpack(">I", _read(buf, 4))
+        return [_decode_value(buf) for _ in range(n)]
+    if tag == b"D":
+        (n,) = struct.unpack(">I", _read(buf, 4))
+        out = {}
+        for _ in range(n):
+            k = _decode_value(buf)
+            out[k] = _decode_value(buf)
+        return out
+    if tag == b"A":
+        (n,) = struct.unpack(">I", _read(buf, 4))
+        dtype = _dtype_by_name(_read(buf, n).decode("ascii"))
+        (ndim,) = struct.unpack(">B", _read(buf, 1))
+        shape = struct.unpack(f">{ndim}I", _read(buf, 4 * ndim)) if ndim else ()
+        (nbytes,) = struct.unpack(">I", _read(buf, 4))
+        raw = _read(buf, nbytes)
+        expect = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        if nbytes != expect:
+            raise WireError(f"array byte count {nbytes} != shape/dtype "
+                            f"promise {expect}")
+        return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+    raise WireError(f"unknown wire tag {tag!r}")
+
+
+def encode(value: Any) -> bytes:
+    """Serialize one value tree to payload bytes (no frame header)."""
+    out = io.BytesIO()
+    _encode_value(out, value)
+    return out.getvalue()
+
+
+def decode(payload: bytes) -> Any:
+    """Inverse of ``encode``; raises WireError on malformed/trailing bytes."""
+    buf = io.BytesIO(payload)
+    v = _decode_value(buf)
+    rest = buf.read()
+    if rest:
+        raise WireError(f"{len(rest)} trailing bytes after value")
+    return v
+
+
+# -------------------------------------------------------------------- frames
+
+def pack_frame(payload: bytes, kind: int = KIND_MSG) -> bytes:
+    return _HEADER.pack(MAGIC, WIRE_VERSION, kind, len(payload)) + payload
+
+
+def unpack_header(header: bytes) -> Tuple[int, int]:
+    """(kind, payload_length) of a frame header; validates magic+version."""
+    magic, version, kind, length = _HEADER.unpack(header)
+    if magic != MAGIC:
+        raise WireError(f"bad frame magic {magic!r}")
+    if version != WIRE_VERSION:
+        raise WireError(f"unsupported wire version {version} "
+                        f"(this reader speaks {WIRE_VERSION})")
+    return kind, length
+
+
+HEADER_SIZE = _HEADER.size
+
+
+# ------------------------------------------------------------------- sockets
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    got = 0
+    while got < n:
+        b = sock.recv(min(n - got, 1 << 20))
+        if not b:
+            raise ConnectionError("peer closed mid-frame")
+        chunks.append(b)
+        got += len(b)
+    return b"".join(chunks)
+
+
+def send_msg(sock: socket.socket, msg: Any) -> None:
+    """Encode + frame + send one message (blocking, whole frame)."""
+    sock.sendall(pack_frame(encode(msg)))
+
+
+def recv_msg(sock: socket.socket) -> Any:
+    """Receive + decode one framed message (blocking)."""
+    kind, length = unpack_header(_recv_exact(sock, HEADER_SIZE))
+    payload = _recv_exact(sock, length) if length else b""
+    return decode(payload)
+
+
+# ------------------------------------------------- serving object round-trips
+
+def scene_to_wire(scene) -> dict:
+    return {"coords": scene.coords, "feats": scene.feats}
+
+
+def scene_from_wire(d: dict):
+    from repro.serve.batcher import Scene
+    return Scene(coords=d["coords"], feats=d["feats"])
+
+
+def delta_to_wire(delta) -> dict:
+    return {"removed": delta.removed, "added_coords": delta.added_coords,
+            "added_feats": delta.added_feats}
+
+
+def delta_from_wire(d: dict):
+    from repro.serve.batcher import SceneDelta
+    return SceneDelta(removed=d["removed"], added_coords=d["added_coords"],
+                      added_feats=d["added_feats"])
+
+
+def result_to_wire(res) -> dict:
+    return {"coords": res.coords, "feats": res.feats, "stride": res.stride}
+
+
+def result_from_wire(d: dict):
+    from repro.serve.batcher import SceneResult
+    return SceneResult(coords=d["coords"], feats=d["feats"],
+                       stride=int(d["stride"]))
+
+
+def packed_batch_to_wire(batch) -> dict:
+    """Flatten a PackedBatch (device tensors → host numpy) with every
+    declared bound, so the receiver rebuilds a tensor that packs the SAME
+    voxel keys (bounds are the key bit budget — see sparse_tensor.py)."""
+    st = batch.st
+    return {"coords": np.asarray(st.coords), "feats": np.asarray(st.feats),
+            "num_valid": int(st.num_valid), "stride": int(st.stride),
+            "batch_bound": int(st.batch_bound),
+            "spatial_bound": int(st.spatial_bound),
+            "scene_sizes": list(batch.scene_sizes),
+            "bucket": int(batch.bucket), "digest": batch.digest}
+
+
+def packed_batch_from_wire(d: dict):
+    import jax.numpy as jnp
+
+    from repro.serve.batcher import PackedBatch
+    st = SparseTensor(coords=jnp.asarray(d["coords"]),
+                      feats=jnp.asarray(d["feats"]),
+                      num_valid=jnp.asarray(d["num_valid"], jnp.int32),
+                      stride=int(d["stride"]),
+                      batch_bound=int(d["batch_bound"]),
+                      spatial_bound=int(d["spatial_bound"]))
+    return PackedBatch(st=st, scene_sizes=tuple(d["scene_sizes"]),
+                       bucket=int(d["bucket"]), digest=d["digest"])
